@@ -1,0 +1,8 @@
+"""Benchmark harness — one module per paper table/figure.
+
+- bench_sequential: paper Tables 2-3 (sequential algorithm variants)
+- bench_pruning:    paper Tables 5-6 (local pruning: candidates + volume)
+- bench_blocksize:  paper Tables 7-8 / Fig 8 (block-processing sweep)
+- bench_parallel:   paper Figs 3-6 (distribution comparison on 8 devices)
+- roofline:         §Roofline table from the dry-run artifacts
+"""

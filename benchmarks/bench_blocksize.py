@@ -1,0 +1,61 @@
+"""Paper Tables 7-8 / Fig 8: block-processing sweep.
+
+The paper processes query vectors in blocks (1..64) to amortize collective
+latency; larger blocks cut communication/barrier time until memory pressure
+bites. Our ``block_rows`` is the same knob (also the MXU tile height). The
+sweep reports wall time + per-device collective bytes + collective op COUNT
+— the op count is the latency-amortization metric (fewer, larger transfers),
+exactly the effect the paper measures.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_corpus, row, time_fn
+from repro.core.distributed import apss_2d, apss_vertical
+
+T, K = 0.4, 32
+
+
+def run(lines: list) -> None:
+    from repro.launch.hlo_analysis import analyze
+
+    def collective_stats(hlo):
+        return analyze(hlo)["collectives"]
+
+    D = jnp.asarray(bench_corpus(512, 768))
+    mesh_v = jax.make_mesh(
+        (8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    mesh_2d = jax.make_mesh(
+        (4, 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+    for b in (16, 32, 64, 128, 256, 512):
+        fn = functools.partial(
+            apss_vertical, threshold=T, k=K, mesh=mesh_v,
+            accumulation="compressed", block_rows=b, candidate_capacity=256,
+        )
+        us = time_fn(jax.jit(fn), D)
+        st = collective_stats(jax.jit(fn).lower(D).compile().as_text())
+        n_ops = sum(v["count"] for v in st.values())
+        cbytes = sum(v["link_bytes"] for v in st.values())
+        lines.append(row(
+            f"blocksize/vertical-bs{b}", us,
+            f"coll_ops={n_ops};coll_bytes={cbytes:.0f}",
+        ))
+
+    for b in (16, 64, 128):
+        fn = functools.partial(
+            apss_2d, threshold=T, k=K, mesh=mesh_2d,
+            accumulation="compressed", block_rows=b, candidate_capacity=256,
+        )
+        us = time_fn(jax.jit(fn), D)
+        st = collective_stats(jax.jit(fn).lower(D).compile().as_text())
+        n_ops = sum(v["count"] for v in st.values())
+        lines.append(row(f"blocksize/2d-bs{b}", us, f"coll_ops={n_ops}"))

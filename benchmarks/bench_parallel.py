@@ -1,0 +1,75 @@
+"""Paper Figs 3-6: horizontal vs vertical vs 2-D distribution comparison.
+
+8 virtual CPU devices share one socket, so wall-clock "speedup" is not
+meaningful here; the scaling evidence is per-device work (HLO FLOPs from
+cost_analysis — exactly 1/p for ideal distributions) plus per-device
+collective bytes (the paper's communication-volume profiles). Wall time is
+reported for completeness. Real-mesh scaling lives in the roofline table
+(EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_corpus, row, time_fn
+from repro.core.apss import apss_blocked
+from repro.core.distributed import apss_2d, apss_horizontal, apss_vertical
+
+T, K = 0.4, 32
+
+
+def _flops_and_coll(fn, D):
+    """Loop-aware per-device FLOPs and collective link bytes."""
+    from repro.launch.hlo_analysis import analyze
+
+    comp = jax.jit(fn).lower(D).compile()
+    a = analyze(comp.as_text())
+    return a["flops"], a["link_bytes"]
+
+
+def run(lines: list) -> None:
+    D = jnp.asarray(bench_corpus(1024, 768))
+
+    seq = jax.jit(functools.partial(apss_blocked, threshold=T, k=K, block_rows=256))
+    us0 = time_fn(seq, D)
+    fl0, _ = _flops_and_coll(
+        functools.partial(apss_blocked, threshold=T, k=K, block_rows=256), D
+    )
+    lines.append(row("parallel/sequential", us0, f"flops_dev={fl0:.2e}"))
+
+    A = jax.sharding.AxisType.Auto
+    mesh_h = jax.make_mesh((8,), ("data",), axis_types=(A,))
+    mesh_v = jax.make_mesh((8,), ("model",), axis_types=(A,))
+    mesh_2d = jax.make_mesh((4, 2), ("data", "model"), axis_types=(A,) * 2)
+
+    cases = {
+        "horizontal-allgather": functools.partial(
+            apss_horizontal, threshold=T, k=K, mesh=mesh_h,
+            schedule="allgather", block_rows=128),
+        "horizontal-ring": functools.partial(
+            apss_horizontal, threshold=T, k=K, mesh=mesh_h,
+            schedule="ring", block_rows=128),
+        "horizontal-halfring": functools.partial(
+            apss_horizontal, threshold=T, k=K, mesh=mesh_h,
+            schedule="halfring", block_rows=128),
+        "vertical-compressed": functools.partial(
+            apss_vertical, threshold=T, k=K, mesh=mesh_v,
+            accumulation="compressed", block_rows=128,
+            candidate_capacity=256),
+        "2d-compressed": functools.partial(
+            apss_2d, threshold=T, k=K, mesh=mesh_2d,
+            accumulation="compressed", block_rows=128,
+            candidate_capacity=256),
+    }
+    for name, fn in cases.items():
+        us = time_fn(jax.jit(fn), D)
+        fl, cb = _flops_and_coll(fn, D)
+        lines.append(row(
+            f"parallel/{name}", us,
+            f"flops_dev={fl:.2e};work_scaling={fl0/max(fl,1):.1f}x;"
+            f"coll_bytes={cb:.0f}",
+        ))

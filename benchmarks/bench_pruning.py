@@ -1,0 +1,73 @@
+"""Paper Tables 5-6: vertical-accumulation variants — local pruning's effect
+on candidates and communication volume.
+
+Paper columns → our columns:
+  Scores  → words communicated per query block (dense vs compressed)
+  Cand    → avg/max local candidates at t/p (exact, measured)
+The HLO-derived per-device collective bytes (same parser as the roofline)
+give the 'communication time' analogue without wall-clock noise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_corpus, row, time_fn
+from repro.core.distributed import apss_vertical
+from repro.core.pruning import local_threshold
+
+T, K = 0.4, 32
+
+
+def _mesh(p):
+    return jax.make_mesh(
+        (p,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+def _collective_bytes(fn, D):
+    """Loop-aware per-device collective link bytes (hlo_analysis)."""
+    from repro.launch.hlo_analysis import analyze
+
+    hlo = jax.jit(fn).lower(D).compile().as_text()
+    return analyze(hlo)["link_bytes"]
+
+
+def run(lines: list) -> None:
+    # n/capacity ratio sized so compaction can show its 10-100× volume win
+    # (paper Tables 5-6); tiny corpora make the candidate union ≈ n.
+    Dn = bench_corpus(2048, 768)
+    D = jnp.asarray(Dn)
+    n = D.shape[0]
+
+    for p in (2, 4, 8):
+        mesh = _mesh(p)
+        # measured local candidate statistics at t/p (paper's Cand columns)
+        t_loc = float(local_threshold(T, p))
+        cols = np.array_split(np.arange(D.shape[1]), p)
+        cand_counts = []
+        for c in cols:
+            A = Dn[:, c] @ Dn[:, c].T
+            cand_counts.append((A >= t_loc).sum(1))
+        cand = np.stack(cand_counts)
+        for acc, name in (
+            ("allreduce", "noopt"),
+            ("scatter", "flat-scatter"),
+            ("compressed", "localpruning"),
+            ("recursive", "recursive"),
+        ):
+            fn = functools.partial(
+                apss_vertical, threshold=T, k=K, mesh=mesh,
+                accumulation=acc, block_rows=256, candidate_capacity=64,
+            )
+            us = time_fn(jax.jit(fn), D, iters=3)
+            cbytes = _collective_bytes(fn, D)
+            derived = (
+                f"p={p};coll_bytes={cbytes:.0f};"
+                f"cand_avg={cand.mean():.0f};cand_max={cand.max()}"
+            )
+            lines.append(row(f"pruning/vertical-{name}-p{p}", us, derived))

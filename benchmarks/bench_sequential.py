@@ -1,0 +1,60 @@
+"""Paper Tables 2-3: sequential all-pairs variants.
+
+The paper compares all-pairs-0/1/2 + optimizations and finds the dense-array
+variant (all-pairs-0-array) fastest. Our TPU mapping has the analogous menu:
+
+  reference        one dense n×n einsum (all-pairs-0-array, unblocked)
+  blocked-<b>      row-blocked streaming (paper §5.1.9 block processing)
+  kernel-dense     Pallas apss_block, no tile pruning (interpret on CPU)
+  kernel-pruned    Pallas apss_block + maxweight tile mask (partial
+                   indexing/minsize at tile granularity)
+
+Derived column: matches found / live-tile fraction (pruning effectiveness).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_corpus, row, time_fn
+from repro.core.apss import apss_blocked, apss_reference
+from repro.core.pruning import block_prune_mask, prune_stats
+from repro.kernels.apss_block.ops import apss_block_matmul
+
+T, K = 0.4, 32
+
+
+def run(lines: list) -> None:
+    D = jnp.asarray(bench_corpus(1024, 768))
+
+    ref = jax.jit(lambda d: apss_reference(d, T, K))
+    us = time_fn(ref, D)
+    n_matches = int(ref(D).counts.sum())
+    lines.append(row("seq/reference", us, f"matches={n_matches}"))
+
+    for b in (128, 256, 512):
+        fn = jax.jit(functools.partial(apss_blocked, threshold=T, k=K, block_rows=b))
+        us = time_fn(fn, D)
+        assert int(fn(D).counts.sum()) == n_matches
+        lines.append(row(f"seq/blocked-{b}", us, f"matches={n_matches}"))
+
+    kd = jax.jit(
+        lambda d: apss_block_matmul(
+            d, d, T, auto_mask=False, block_m=256, block_n=256, block_k=256
+        )
+    )
+    us = time_fn(kd, D)
+    lines.append(row("seq/kernel-dense", us, "interpret=cpu"))
+
+    kp = jax.jit(
+        lambda d: apss_block_matmul(
+            d, d, T, auto_mask=True, block_m=256, block_n=256, block_k=256
+        )
+    )
+    us = time_fn(kp, D)
+    mask = block_prune_mask(D, D, T, 256, 256)
+    live = float(prune_stats(mask).live_fraction)
+    lines.append(row("seq/kernel-pruned", us, f"live_tiles={live:.2f}"))

@@ -1,0 +1,31 @@
+"""Timing + data helpers shared by the benchmark modules."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def bench_corpus(n: int = 1024, m: int = 768, density: float = 0.05, seed: int = 0):
+    """Paper-style power-law corpus at CPU-benchmark scale."""
+    from repro.data.synthetic import synthetic_corpus
+
+    return synthetic_corpus(n, m, density * m, seed=seed)
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,87 @@
+"""§Roofline table builder: aggregates experiments/dryrun/*.json.
+
+Per (arch × shape × mesh): the three terms (compute/memory/collective,
+seconds), dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilization ratio, and
+per-device memory. Markdown to stdout; also writes
+experiments/roofline_table.md for EXPERIMENTS.md inclusion.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_results(path: str = "experiments/dryrun") -> list:
+    out = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        parts = os.path.basename(f)[: -len(".json")].split("__")
+        r["tag"] = parts[3] if len(parts) > 3 else ""
+        out.append(r)
+    return out
+
+
+def fmt_table(results: list, *, variants: bool = True) -> str:
+    head = (
+        "| arch | shape | mesh | variant | mem/dev GiB | compute ms | "
+        "memory ms | collective ms | dominant | useful/HLO flops |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in sorted(
+        results, key=lambda r: (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+    ):
+        if not variants and r.get("tag"):
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('tag') or 'baseline'} "
+            f"| {r['memory']['total_bytes']/2**30:.2f} "
+            f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+            f"| {t['collective_s']*1e3:.2f} | **{t['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} |"
+        )
+    return head + "\n".join(rows) + "\n"
+
+
+def run(lines: list) -> None:
+    results = load_results()
+    if not results:
+        lines.append("roofline/no-dryrun-artifacts,0.0,run launch.dryrun first")
+        return
+    table = fmt_table(results)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(table)
+    dominants = {}
+    for r in results:
+        dominants.setdefault(r["roofline"]["dominant"], 0)
+        dominants[r["roofline"]["dominant"]] += 1
+    for r in sorted(
+        results, key=lambda r: (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+    ):
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["compute_s"] / bound if bound else 0.0
+        tag = f".{r['tag']}" if r.get("tag") else ""
+        lines.append(
+            f"roofline/{r['arch']}.{r['shape']}.{r['mesh']}{tag},"
+            f"{bound*1e6:.1f},"
+            f"dominant={t['dominant']};compute_frac={frac:.2f};"
+            f"useful={r['useful_flops_ratio']:.2f}"
+        )
+    lines.append(
+        f"roofline/summary,0.0,cells={len(results)};dominants={dominants}"
+    )
+
+
+if __name__ == "__main__":
+    table = fmt_table(load_results())
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(table)
+    print(table)

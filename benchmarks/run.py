@@ -1,0 +1,56 @@
+import os
+
+# 8 virtual devices for the distribution benchmarks (paper Figs 3-6);
+# NOT the dry-run's 512 (that runs only via launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark driver — one module per paper table. Prints
+``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only sequential,pruning,...]
+"""
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: sequential,pruning,blocksize,parallel,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_blocksize,
+        bench_parallel,
+        bench_pruning,
+        bench_sequential,
+        roofline,
+    )
+
+    suites = {
+        "sequential": bench_sequential.run,   # paper Tables 2-3
+        "pruning": bench_pruning.run,         # paper Tables 5-6
+        "blocksize": bench_blocksize.run,     # paper Tables 7-8 / Fig 8
+        "parallel": bench_parallel.run,       # paper Figs 3-6
+        "roofline": roofline.run,             # EXPERIMENTS.md §Roofline
+    }
+    selected = args.only.split(",") if args.only else list(suites)
+
+    lines: list = ["name,us_per_call,derived"]
+    failed = []
+    for name in selected:
+        try:
+            suites[name](lines)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print("\n".join(lines))
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""APSS → similarity graph → GNN: the paper's "similarity graph as a
+computational kernel" application, end to end.
+
+Builds an ε-neighborhood graph over a synthetic corpus with the APSS core,
+feeds it to the GAT architecture (gat-cora assigned config family), and
+trains node classification for a few hundred steps.
+
+    PYTHONPATH=src python examples/similarity_graph.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apss import apss_blocked, normalize_rows
+from repro.core.graph import coo_to_padded_edges, matches_to_coo
+from repro.launch.train import make_gat_train_step
+from repro.models import gnn
+from repro.optim import adamw_init
+
+
+def make_clustered_corpus(n_per_class=64, n_classes=5, d=128, seed=0):
+    """Gaussian clusters → rows with class structure the graph can reveal."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_classes, d)) * 2.0
+    X, y = [], []
+    for c in range(n_classes):
+        X.append(centers[c] + rng.standard_normal((n_per_class, d)))
+        y.append(np.full(n_per_class, c))
+    X = np.concatenate(X).astype(np.float32)
+    y = np.concatenate(y).astype(np.int32)
+    perm = rng.permutation(len(X))
+    return X[perm], y[perm]
+
+
+def main() -> None:
+    X, y = make_clustered_corpus()
+    n = len(X)
+    D = np.asarray(normalize_rows(jnp.asarray(X)))
+
+    # 1. similarity graph via the paper's algorithm
+    t = 0.55
+    matches = apss_blocked(jnp.asarray(D), t, k=32, block_rows=64)
+    rows, cols, w = matches_to_coo(matches)
+    print(f"APSS: {len(rows)} edges at t={t} over {n} vectors")
+
+    src, dst, wts, mask = coo_to_padded_edges(
+        rows, cols, w, max_edges=4 * len(rows) + 2 * n,
+        add_reverse=True, add_self_loops_n=n,
+    )
+
+    # 2. GAT on the similarity graph
+    cfg = gnn.GATConfig(name="gat-simgraph", d_feat=X.shape[1], n_classes=5,
+                        d_hidden=8, n_heads=4)
+    params = gnn.init_gat(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    label_mask = (np.random.default_rng(1).random(n) < 0.3).astype(np.float32)
+    batch = {
+        "features": jnp.asarray(X),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "edge_mask": jnp.asarray(mask),
+        "labels": jnp.asarray(y),
+        "label_mask": jnp.asarray(label_mask),
+    }
+    step = jax.jit(make_gat_train_step(cfg))
+    for s in range(200):
+        params, opt, metrics = step(params, opt, batch)
+        if s % 50 == 0 or s == 199:
+            print(f"step {s}: loss={float(metrics['loss']):.4f} "
+                  f"train_acc={float(metrics['acc']):.3f}")
+
+    # eval on the unlabeled nodes
+    logits = gnn.gat_forward(params, cfg, batch)
+    pred = np.asarray(jnp.argmax(logits, -1))
+    test = label_mask == 0
+    acc = (pred[test] == y[test]).mean()
+    print(f"held-out accuracy via similarity-graph GAT: {acc:.3f}")
+    assert acc > 0.5, "similarity graph should beat chance by a wide margin"
+
+
+if __name__ == "__main__":
+    main()

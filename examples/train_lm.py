@@ -1,0 +1,46 @@
+"""End-to-end LM training driver (reduced config, a few hundred steps).
+
+Exercises the full production path on CPU: deterministic data pipeline →
+APSS dedup of the input stream → jit'd train step (loss/grad/AdamW) → async
+checkpoints with keep-last-k → auto-resume. This is deliverable (b)'s
+"train a ~100M-class model for a few hundred steps" driver at a CPU-
+friendly scale; the same code runs the full configs through
+``launch/train.py`` on a real mesh.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 120
+"""
+
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    ckpt = args.ckpt_dir or os.path.join(tempfile.mkdtemp(), "ckpt")
+    print(f"[example] training smoke-scale {args.arch} for {args.steps} steps")
+    out = train_loop(
+        arch=args.arch, steps=args.steps, ckpt_dir=ckpt, ckpt_every=40,
+        log_every=20,
+    )
+    print("[example] final metrics:", out)
+    assert np.isfinite(out["loss"])
+    # resume demo: continue 20 more steps from the checkpoint
+    out2 = train_loop(
+        arch=args.arch, steps=args.steps + 20, ckpt_dir=ckpt, ckpt_every=40,
+        log_every=20,
+    )
+    print("[example] resumed +20 steps:", out2)
+
+
+if __name__ == "__main__":
+    main()

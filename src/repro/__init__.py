@@ -1,0 +1,54 @@
+"""repro: a multi-pod JAX framework for the All-Pairs Similarity Problem.
+
+Reproduction (and TPU-native extension) of:
+    Özkural & Aykanat, "1-D and 2-D Parallel Algorithms for All-Pairs
+    Similarity Problem" (CS.IR 2014).
+
+Subpackages:
+
+- :mod:`repro.core`        — the paper's contribution (APSS + distributions)
+- :mod:`repro.kernels`     — Pallas TPU kernels (apss_block, flash_attention,
+                             decode_attention)
+- :mod:`repro.models`      — transformer / recsys / GNN model zoo
+- :mod:`repro.data`        — data pipeline (synthetic corpora, LM batches,
+                             APSS dedup)
+- :mod:`repro.optim`       — optimizers, schedules, gradient compression
+- :mod:`repro.checkpoint`  — sharded checkpointing + fault tolerance
+- :mod:`repro.distributed` — mesh/collective helpers, elastic re-mesh
+- :mod:`repro.configs`     — assigned architecture configs
+- :mod:`repro.launch`      — mesh, dry-run, train and serve entry points
+
+NOTE: this module is import-side-effect free (no jax import at package
+import time) so that ``launch/dryrun.py`` can set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax/jaxlib
+parse the environment. Public names are re-exported lazily.
+"""
+
+__version__ = "1.0.0"
+
+_LAZY = {
+    "apss_reference": ("repro.core.apss", "apss_reference"),
+    "apss_blocked": ("repro.core.apss", "apss_blocked"),
+    "similarity_topk": ("repro.core.apss", "similarity_topk"),
+    "normalize_rows": ("repro.core.apss", "normalize_rows"),
+    "Matches": ("repro.core.matches", "Matches"),
+    "extract_matches": ("repro.core.matches", "extract_matches"),
+    "merge_matches": ("repro.core.matches", "merge_matches"),
+    "apss": ("repro.core.distributed", "apss"),
+    "apss_horizontal": ("repro.core.distributed", "apss_horizontal"),
+    "apss_vertical": ("repro.core.distributed", "apss_vertical"),
+    "apss_2d": ("repro.core.distributed", "apss_2d"),
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

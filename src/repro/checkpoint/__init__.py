@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    save_checkpoint,
+    load_checkpoint,
+    CheckpointManager,
+)

@@ -1,0 +1,103 @@
+"""Config/arch registry plumbing: every assigned architecture registers an
+``ArchDef`` whose shape cells build ``(fn, args, in_shardings, out_shardings)``
+lowering specs for the dry-run (DESIGN.md §e).
+
+Builders return abstract ``jax.ShapeDtypeStruct`` argument trees — no host
+allocation ever happens for the full configs (they are exercised ONLY via
+``launch/dryrun.py``); smoke tests use each arch's ``smoke_config``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _filter_spec(mesh: Mesh, spec: P) -> P:
+    def keep(part):
+        if part is None:
+            return None
+        if isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a in mesh.shape)
+            return kept if kept else None
+        return part if part in mesh.shape else None
+
+    return P(*(keep(part) for part in spec))
+
+
+def shardings_for(mesh: Mesh, specs):
+    """Pytree of PartitionSpec → pytree of NamedSharding (mesh-filtered)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _filter_spec(mesh, s)),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def data_axes_of(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def sds_like(tree):
+    """eval_shape result → plain ShapeDtypeStruct pytree."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellBuild:
+    """Everything the dry-run needs to lower one (arch × shape × mesh)."""
+
+    fn: Callable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any          # pytree or None (auto)
+    static_info: dict           # model flops etc. for the roofline
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    kind: str                   # train | prefill | decode | serve | retrieval
+    desc: str
+    build: Callable[[Any, Mesh], CellBuild]   # (full_config, mesh) -> CellBuild
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    family: str                 # lm | gnn | recsys
+    source: str                 # public-literature citation tag
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    shapes: dict
+
+    def cell(self, shape: str) -> ShapeCell:
+        return self.shapes[shape]
+
+
+REGISTRY: dict = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in REGISTRY:
+        # Import side effects populate the registry lazily.
+        import repro.configs  # noqa: F401
+    return REGISTRY[name]
+
+
+def all_arch_names() -> list:
+    import repro.configs  # noqa: F401
+
+    return sorted(REGISTRY)

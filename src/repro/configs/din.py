@@ -1,0 +1,51 @@
+"""din [recsys] — embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80,
+target attention over user history. [arXiv:1706.06978; paper]"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef, register
+from repro.configs.recsys_common import recsys_shapes
+from repro.models import recsys
+
+
+def config() -> recsys.DINConfig:
+    return recsys.DINConfig(
+        name="din", embed_dim=18, seq_len=100,
+        attn_dims=(80, 40), mlp_dims=(200, 80), n_items=1_000_000,
+    )
+
+
+def smoke_config() -> recsys.DINConfig:
+    return recsys.DINConfig(
+        name="din-smoke", embed_dim=8, seq_len=12,
+        attn_dims=(16, 8), mlp_dims=(32, 16), n_items=500,
+    )
+
+
+def _score(cfg, params, batch):
+    return recsys.din_logits(params, cfg, batch)
+
+
+def _retrieve(cfg, params, batch, candidate_ids):
+    """Pointwise CTR scoring of 1M candidates against one user history."""
+    n = candidate_ids.shape[0]
+    hist = jnp.broadcast_to(batch["history"], (n, cfg.seq_len))
+    logits = recsys.din_logits(
+        params, cfg, {"history": hist, "item_ids": candidate_ids}
+    )
+    return jax.lax.top_k(logits, 256)
+
+
+ARCH = register(ArchDef(
+    name="din",
+    family="recsys",
+    source="arXiv:1706.06978",
+    make_config=config,
+    make_smoke_config=smoke_config,
+    shapes=recsys_shapes(
+        "din", recsys.init_din, recsys.din_param_specs, _score, _retrieve,
+    ),
+))

@@ -1,0 +1,153 @@
+"""gat-cora [gnn] — 2L d_hidden=8 n_heads=8 attention aggregator
+[arXiv:1710.10903; paper].
+
+Shapes:
+  full_graph_sm   n=2708  e=10556     d_feat=1433  (full-batch, Cora)
+  minibatch_lg    n=232965 e=114.6M   batch=1024 fanout 15-10 (sampled)
+  ogb_products    n=2449029 e=61.9M   d_feat=100   (full-batch-large)
+  molecule        n=30 e=64 batch=128              (batched-small-graphs)
+
+Message passing is segment_sum/segment_max over padded edge lists (JAX has
+no CSR SpMM — DESIGN.md §3). Sampled shapes use the real neighbor sampler
+(``repro.data.sampler``); the dry-run lowers the statically-shaped padded
+batch it emits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    ArchDef, CellBuild, ShapeCell, data_axes_of, register, sds, sds_like,
+    shardings_for,
+)
+from repro.data.sampler import sampled_shape
+from repro.launch.train import make_gat_train_step
+from repro.models.gnn import GATConfig, gat_param_specs, init_gat
+from repro.optim import adamw_init
+from repro.optim.optimizer import AdamWState
+
+
+def config() -> GATConfig:
+    return GATConfig(
+        name="gat-cora", n_layers=2, d_hidden=8, n_heads=8,
+        d_feat=1433, n_classes=7,
+    )
+
+
+def smoke_config() -> GATConfig:
+    return GATConfig(
+        name="gat-cora-smoke", n_layers=2, d_hidden=4, n_heads=2,
+        d_feat=32, n_classes=5,
+    )
+
+
+def _graph_sds(n_nodes: int, n_edges: int, d_feat: int) -> dict:
+    return {
+        "features": sds((n_nodes, d_feat), jnp.float32),
+        "edge_src": sds((n_edges,), jnp.int32),
+        "edge_dst": sds((n_edges,), jnp.int32),
+        "edge_mask": sds((n_edges,), jnp.float32),
+        "labels": sds((n_nodes,), jnp.int32),
+        "label_mask": sds((n_nodes,), jnp.float32),
+    }
+
+
+def _build_graph_cell(
+    cfg: GATConfig, mesh, *, n_nodes: int, n_edges: int, d_feat: int,
+    shard_edges: bool,
+) -> CellBuild:
+    cfg = dataclasses.replace(cfg, d_feat=d_feat)
+    params = sds_like(jax.eval_shape(lambda k: init_gat(k, cfg), jax.random.key(0)))
+    opt = sds_like(jax.eval_shape(adamw_init, params))
+    batch = _graph_sds(n_nodes, n_edges, d_feat)
+    daxes = data_axes_of(mesh)
+    e_ax = daxes if shard_edges else None
+    n_ax = daxes if shard_edges else None
+    batch_sh = {
+        # nodes sharded over data; edges sharded over data; GSPMD inserts
+        # the scatter-add partials + all-reduce for cross-shard aggregation.
+        "features": shardings_for(mesh, P(n_ax, None)),
+        "edge_src": shardings_for(mesh, P(e_ax)),
+        "edge_dst": shardings_for(mesh, P(e_ax)),
+        "edge_mask": shardings_for(mesh, P(e_ax)),
+        "labels": shardings_for(mesh, P(n_ax)),
+        "label_mask": shardings_for(mesh, P(n_ax)),
+    }
+    p_sh = shardings_for(mesh, gat_param_specs(cfg))
+    o_sh = AdamWState(
+        step=shardings_for(mesh, P()),
+        m=shardings_for(mesh, gat_param_specs(cfg)),
+        v=shardings_for(mesh, gat_param_specs(cfg)),
+    )
+    fn = make_gat_train_step(cfg)
+    # model flops: per edge per layer ~ attention+message ops; dominated by
+    # the dense projections: 2·nnz(W)·n_nodes per layer, ×3 for train.
+    l1 = 2 * n_nodes * d_feat * cfg.d_hidden * cfg.n_heads
+    l2 = 2 * n_nodes * cfg.d_hidden * cfg.n_heads * cfg.n_classes
+    edge_work = 4 * n_edges * cfg.n_heads * cfg.d_hidden
+    return CellBuild(
+        fn=fn,
+        args=(params, opt, batch),
+        in_shardings=(p_sh, o_sh, batch_sh),
+        out_shardings=(p_sh, o_sh, None),
+        static_info={
+            "model_flops": 3 * (l1 + l2 + edge_work),
+            "kind": "train",
+            "n_nodes": n_nodes,
+            "n_edges": n_edges,
+        },
+    )
+
+
+_SAMPLED_N, _SAMPLED_E = sampled_shape(1024, (15, 10))
+_MOL_N, _MOL_E = 30 * 128, 64 * 128 + 30 * 128  # + self loops
+
+ARCH = register(ArchDef(
+    name="gat-cora",
+    family="gnn",
+    source="arXiv:1710.10903",
+    make_config=config,
+    make_smoke_config=smoke_config,
+    shapes={
+        "full_graph_sm": ShapeCell(
+            kind="train",
+            desc="n=2708 e=10556 d_feat=1433 (full-batch); graph replicated "
+                 "(Cora is tiny), params/compute sharded",
+            build=lambda cfg, mesh: _build_graph_cell(
+                cfg, mesh, n_nodes=2708, n_edges=2 * 10556 + 2708,
+                d_feat=1433, shard_edges=False,
+            ),
+        ),
+        "minibatch_lg": ShapeCell(
+            kind="train",
+            desc=f"sampled batch_nodes=1024 fanout 15-10 → padded "
+                 f"n={_SAMPLED_N} e={_SAMPLED_E} (real neighbor sampler)",
+            build=lambda cfg, mesh: _build_graph_cell(
+                cfg, mesh, n_nodes=_SAMPLED_N, n_edges=_SAMPLED_E,
+                d_feat=602, shard_edges=True,   # reddit-like d_feat
+            ),
+        ),
+        "ogb_products": ShapeCell(
+            kind="train",
+            desc="n=2449029 e=61859140 d_feat=100 (full-batch-large), "
+                 "nodes+edges sharded over data axes",
+            build=lambda cfg, mesh: _build_graph_cell(
+                cfg, mesh, n_nodes=2449408,      # padded to /512
+                n_edges=61859840, d_feat=100, shard_edges=True,
+            ),
+        ),
+        "molecule": ShapeCell(
+            kind="train",
+            desc="batch=128 graphs of n=30 e=64 (block-diagonal packing)",
+            build=lambda cfg, mesh: _build_graph_cell(
+                cfg, mesh, n_nodes=_MOL_N, n_edges=_MOL_E,
+                d_feat=30, shard_edges=True,
+            ),
+        ),
+    },
+))

@@ -1,0 +1,195 @@
+"""Shared cell builders for the LM-family architectures.
+
+Shapes (assigned): train_4k (train), prefill_32k (inference-prefill),
+decode_32k (inference-decode: 1 new token, 32k KV cache, batch 128),
+long_500k (long-context decode: 1 new token, 524288 KV cache, batch 1).
+
+``long_500k`` note (DESIGN.md §4): decode cost is linear in cache length, so
+full attention is exact and affordable — the cache's sequence dim is sharded
+over (data, model) and GSPMD inserts the logsumexp-style softmax reductions
+(flash-decoding). Nothing is approximated and nothing is skipped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    ArchDef,
+    CellBuild,
+    ShapeCell,
+    data_axes_of,
+    sds,
+    sds_like,
+    shardings_for,
+)
+from repro.launch.train import make_lm_train_step
+from repro.models.transformer import (
+    TransformerConfig,
+    cache_specs,
+    count_active_params,
+    count_params,
+    decode_step,
+    init_transformer,
+    make_cache,
+    param_specs,
+    prefill,
+)
+from repro.optim import adamw_init
+from repro.optim.optimizer import AdamWState
+
+
+def _params_sds(cfg):
+    return sds_like(
+        jax.eval_shape(lambda k: init_transformer(k, cfg), jax.random.key(0))
+    )
+
+
+def _param_shardings(mesh, cfg):
+    return shardings_for(mesh, param_specs(cfg))
+
+
+def _opt_shardings(mesh, cfg):
+    ps = param_specs(cfg)
+    return AdamWState(
+        step=shardings_for(mesh, P()),
+        m=shardings_for(mesh, ps),
+        v=shardings_for(mesh, ps),
+    )
+
+
+def _lm_static_info(cfg, *, tokens: int, kind: str, cache_len: int = 0) -> dict:
+    n_total = count_params(cfg)
+    n_active = count_active_params(cfg)
+    fwd = 2 * n_active * tokens
+    flops = 3 * fwd if kind == "train" else fwd
+    # attention score+value FLOPs (not in 6·N·D): 2 matmuls × 2 FLOP/MAC
+    s_eff = cache_len if cache_len else 0
+    return {
+        "params_total": n_total,
+        "params_active": n_active,
+        "tokens": tokens,
+        "model_flops": flops,
+        "kind": kind,
+    }
+
+
+def build_train_cell(cfg: TransformerConfig, mesh, *, global_batch: int, seq_len: int) -> CellBuild:
+    cfg = dataclasses.replace(cfg, fsdp=True)
+    params = _params_sds(cfg)
+    opt = sds_like(jax.eval_shape(adamw_init, params))
+    batch = {"tokens": sds((global_batch, seq_len), jnp.int32)}
+    daxes = data_axes_of(mesh)
+    batch_sh = {"tokens": shardings_for(mesh, P(daxes, None))}
+    p_sh = _param_shardings(mesh, cfg)
+    o_sh = _opt_shardings(mesh, cfg)
+    fn = make_lm_train_step(cfg)
+    return CellBuild(
+        fn=fn,
+        args=(params, opt, batch),
+        in_shardings=(p_sh, o_sh, batch_sh),
+        out_shardings=(p_sh, o_sh, None),
+        static_info=_lm_static_info(
+            cfg, tokens=global_batch * seq_len, kind="train"
+        ),
+    )
+
+
+def build_prefill_cell(cfg: TransformerConfig, mesh, *, global_batch: int, seq_len: int) -> CellBuild:
+    cfg = dataclasses.replace(cfg, fsdp=False, remat=False)
+    params = _params_sds(cfg)
+    tokens = sds((global_batch, seq_len), jnp.int32)
+    daxes = data_axes_of(mesh)
+    return CellBuild(
+        fn=functools.partial(_prefill_fn, cfg),
+        args=(params, tokens),
+        in_shardings=(_param_shardings(mesh, cfg), shardings_for(mesh, P(daxes, None))),
+        out_shardings=None,
+        static_info=_lm_static_info(
+            cfg, tokens=global_batch * seq_len, kind="prefill"
+        ),
+    )
+
+
+def _prefill_fn(cfg, params, tokens):
+    return prefill(params, cfg, tokens)
+
+
+def _decode_fn(cfg, params, cache, tokens):
+    return decode_step(params, cfg, cache, tokens)
+
+
+def build_decode_cell(
+    cfg: TransformerConfig, mesh, *, global_batch: int, cache_len: int,
+    seq_axes=("model",), batch_axes=("pod", "data"),
+) -> CellBuild:
+    cfg = dataclasses.replace(cfg, fsdp=False, remat=False)
+    params = _params_sds(cfg)
+    cache = sds_like(
+        jax.eval_shape(lambda: make_cache(cfg, global_batch, cache_len))
+    )
+    tokens = sds((global_batch,), jnp.int32)
+    c_specs = cache_specs(cfg, seq_axes=seq_axes, batch_axes=batch_axes)
+    c_sh = shardings_for(mesh, c_specs)
+    tok_sh = shardings_for(mesh, P(batch_axes))
+    return CellBuild(
+        fn=functools.partial(_decode_fn, cfg),
+        args=(params, cache, tokens),
+        in_shardings=(_param_shardings(mesh, cfg), c_sh, tok_sh),
+        out_shardings=(None, c_sh),
+        static_info=_lm_static_info(
+            cfg, tokens=global_batch, kind="decode", cache_len=cache_len
+        ),
+    )
+
+
+def lm_shapes(train_batch=256, train_seq=4096) -> dict:
+    return {
+        "train_4k": ShapeCell(
+            kind="train",
+            desc=f"seq_len=4096 global_batch={train_batch} (training)",
+            build=lambda cfg, mesh: build_train_cell(
+                cfg, mesh, global_batch=train_batch, seq_len=train_seq
+            ),
+        ),
+        "prefill_32k": ShapeCell(
+            kind="prefill",
+            desc="seq_len=32768 global_batch=32 (inference-prefill)",
+            build=lambda cfg, mesh: build_prefill_cell(
+                cfg, mesh, global_batch=32, seq_len=32768
+            ),
+        ),
+        "decode_32k": ShapeCell(
+            kind="decode",
+            desc="KV cache 32768, global_batch=128 (inference-decode)",
+            build=lambda cfg, mesh: build_decode_cell(
+                cfg, mesh, global_batch=128, cache_len=32768,
+                seq_axes=("model",), batch_axes=("pod", "data"),
+            ),
+        ),
+        "long_500k": ShapeCell(
+            kind="decode",
+            desc="KV cache 524288, global_batch=1 (long-context decode, "
+                 "sequence-parallel full attention)",
+            build=lambda cfg, mesh: build_decode_cell(
+                cfg, mesh, global_batch=1, cache_len=524288,
+                seq_axes=("data", "model"), batch_axes=(),
+            ),
+        ),
+    }
+
+
+def lm_arch(name: str, source: str, make_config, make_smoke_config) -> ArchDef:
+    return ArchDef(
+        name=name,
+        family="lm",
+        source=source,
+        make_config=make_config,
+        make_smoke_config=make_smoke_config,
+        shapes=lm_shapes(),
+    )

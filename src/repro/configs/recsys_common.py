@@ -1,0 +1,184 @@
+"""Shared cell builders for the recsys architectures.
+
+Shapes (assigned): train_batch (batch=65536 training), serve_p99 (batch=512
+online), serve_bulk (batch=262144 offline scoring), retrieval_cand (batch=1
+query × 1,000,000 candidates).
+
+``retrieval_cand`` routes through the APSS core (``similarity_topk`` — the
+paper's algorithm IS retrieval scoring); candidates shard over the data axes
+exactly like the horizontal distribution's corpus rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    CellBuild, ShapeCell, data_axes_of, sds, sds_like, shardings_for,
+)
+from repro.launch.train import make_recsys_train_step
+from repro.models import recsys
+from repro.optim import adamw_init
+from repro.optim.optimizer import AdamWState
+
+N_CANDIDATES = 1_000_000
+
+
+def _params_and_opt(init_fn, cfg, mesh, spec_fn):
+    params = sds_like(jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.key(0)))
+    opt = sds_like(jax.eval_shape(adamw_init, params))
+    specs = spec_fn(cfg)
+    p_sh = shardings_for(mesh, specs)
+    o_sh = AdamWState(
+        step=shardings_for(mesh, P()),
+        m=shardings_for(mesh, specs),
+        v=shardings_for(mesh, specs),
+    )
+    return params, opt, p_sh, o_sh
+
+
+def _batch_sds(cfg, batch: int, kind: str) -> dict:
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        b = {
+            "user_fields": sds((batch, cfg.n_user_fields), jnp.int32),
+            "history": sds((batch, cfg.history_len), jnp.int32),
+            "item_ids": sds((batch,), jnp.int32),
+        }
+    elif isinstance(cfg, recsys.Bert4RecConfig):
+        b = {"item_ids": sds((batch, cfg.seq_len), jnp.int32)}
+        if kind == "train":
+            b["labels"] = sds((batch, cfg.seq_len), jnp.int32)
+            b["mask"] = sds((batch, cfg.seq_len), jnp.bool_)
+    elif isinstance(cfg, recsys.DINConfig):
+        b = {
+            "history": sds((batch, cfg.seq_len), jnp.int32),
+            "item_ids": sds((batch,), jnp.int32),
+        }
+        if kind == "train":
+            b["click"] = sds((batch,), jnp.int32)
+    else:  # BST
+        b = {
+            "history": sds((batch, cfg.seq_len - 1), jnp.int32),
+            "item_ids": sds((batch,), jnp.int32),
+        }
+        if kind == "train":
+            b["click"] = sds((batch,), jnp.int32)
+    return b
+
+
+def _batch_shardings(mesh, batch_sds):
+    daxes = data_axes_of(mesh)
+    return jax.tree.map(
+        lambda s: shardings_for(mesh, P(daxes, *([None] * (len(s.shape) - 1)))),
+        batch_sds,
+    )
+
+
+def _flops_per_example(cfg) -> int:
+    """Dense-layer MAC count ×2 (embedding lookups are bandwidth, not FLOPs)."""
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        d_in_u = cfg.embed_dim * (cfg.n_user_fields + 1)
+        dims_u = (d_in_u, *cfg.tower_dims)
+        dims_i = (cfg.embed_dim, *cfg.tower_dims)
+        f = sum(a * b for a, b in zip(dims_u[:-1], dims_u[1:]))
+        f += sum(a * b for a, b in zip(dims_i[:-1], dims_i[1:]))
+        return 2 * f
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        d = cfg.embed_dim
+        per_tok = 4 * d * d + 2 * d * cfg.d_ff
+        attn = 2 * cfg.seq_len * d
+        return 2 * cfg.n_blocks * cfg.seq_len * (per_tok + attn)
+    if isinstance(cfg, recsys.DINConfig):
+        e = cfg.embed_dim
+        attn = cfg.seq_len * (4 * e * 80 + 80 * 40 + 40)
+        head = 2 * e * 200 + 200 * 80 + 80
+        return 2 * (attn + head)
+    cfg_b: recsys.BSTConfig = cfg
+    e = cfg_b.embed_dim
+    s = cfg_b.seq_len
+    blk = s * (4 * e * e + 2 * e * cfg_b.d_ff) + s * s * e * 2
+    m_dims = (s * e, *cfg_b.mlp_dims, 1)
+    head = sum(a * b for a, b in zip(m_dims[:-1], m_dims[1:]))
+    return 2 * (cfg_b.n_blocks * blk + head)
+
+
+def _build_train(cfg, mesh, init_fn, spec_fn, batch: int) -> CellBuild:
+    params, opt, p_sh, o_sh = _params_and_opt(init_fn, cfg, mesh, spec_fn)
+    bs = _batch_sds(cfg, batch, "train")
+    fn = make_recsys_train_step(cfg)
+    return CellBuild(
+        fn=fn,
+        args=(params, opt, bs),
+        in_shardings=(p_sh, o_sh, _batch_shardings(mesh, bs)),
+        out_shardings=(p_sh, o_sh, None),
+        static_info={
+            "kind": "train",
+            "model_flops": 3 * batch * _flops_per_example(cfg),
+            "batch": batch,
+        },
+    )
+
+
+def _build_serve(cfg, mesh, init_fn, spec_fn, score_fn, batch: int) -> CellBuild:
+    params, _, p_sh, _ = _params_and_opt(init_fn, cfg, mesh, spec_fn)
+    bs = _batch_sds(cfg, batch, "serve")
+    return CellBuild(
+        fn=functools.partial(score_fn, cfg),
+        args=(params, bs),
+        in_shardings=(p_sh, _batch_shardings(mesh, bs)),
+        out_shardings=None,
+        static_info={
+            "kind": "serve",
+            "model_flops": batch * _flops_per_example(cfg),
+            "batch": batch,
+        },
+    )
+
+
+def _build_retrieval(cfg, mesh, init_fn, spec_fn, retrieval_fn) -> CellBuild:
+    params, _, p_sh, _ = _params_and_opt(init_fn, cfg, mesh, spec_fn)
+    bs = _batch_sds(cfg, 1, "serve")
+    daxes = data_axes_of(mesh)
+    cand = sds((N_CANDIDATES,), jnp.int32)
+    cand_sh = shardings_for(mesh, P(daxes))
+    # The single query replicates; only the 1M-candidate corpus shards
+    # (the paper's horizontal distribution of the similarity join corpus).
+    q_sh = jax.tree.map(lambda s: shardings_for(mesh, P()), bs)
+    return CellBuild(
+        fn=functools.partial(retrieval_fn, cfg),
+        args=(params, bs, cand),
+        in_shardings=(p_sh, q_sh, cand_sh),
+        out_shardings=None,
+        static_info={
+            "kind": "retrieval",
+            "model_flops": _flops_per_example(cfg)
+            + 2 * N_CANDIDATES * getattr(cfg, "embed_dim", 64),
+            "batch": N_CANDIDATES,
+        },
+    )
+
+
+def recsys_shapes(arch, init_fn, spec_fn, score_fn, retrieval_fn) -> dict:
+    return {
+        "train_batch": ShapeCell(
+            kind="train", desc="batch=65536 (training)",
+            build=lambda cfg, mesh: _build_train(cfg, mesh, init_fn, spec_fn, 65536),
+        ),
+        "serve_p99": ShapeCell(
+            kind="serve", desc="batch=512 (online-inference)",
+            build=lambda cfg, mesh: _build_serve(cfg, mesh, init_fn, spec_fn, score_fn, 512),
+        ),
+        "serve_bulk": ShapeCell(
+            kind="serve", desc="batch=262144 (offline-scoring)",
+            build=lambda cfg, mesh: _build_serve(cfg, mesh, init_fn, spec_fn, score_fn, 262144),
+        ),
+        "retrieval_cand": ShapeCell(
+            kind="retrieval",
+            desc="batch=1 n_candidates=1,000,000 (APSS-backed retrieval)",
+            build=lambda cfg, mesh: _build_retrieval(cfg, mesh, init_fn, spec_fn, retrieval_fn),
+        ),
+    }

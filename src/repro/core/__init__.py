@@ -1,0 +1,30 @@
+"""The paper's primary contribution: all-pairs similarity search (APSS).
+
+Layout:
+
+- :mod:`repro.core.apss`        single-device APSS (reference oracle + blocked)
+- :mod:`repro.core.matches`     fixed-capacity match extraction / merging
+- :mod:`repro.core.pruning`     maxweight / minsize block bounds, local pruning
+- :mod:`repro.core.distributed` 1-D horizontal, 1-D vertical, 2-D shard_map
+                                algorithms (paper Algs. 3-7) + TPU extensions
+- :mod:`repro.core.graph`       similarity-graph (COO) construction utilities
+"""
+
+from repro.core.apss import (  # noqa: F401
+    apss_reference,
+    apss_blocked,
+    similarity_topk,
+    normalize_rows,
+)
+from repro.core.matches import Matches, extract_matches, merge_matches  # noqa: F401
+from repro.core.pruning import (  # noqa: F401
+    block_maxweight_bounds,
+    block_minsize_bounds,
+    block_prune_mask,
+    local_threshold,
+)
+from repro.core.distributed import (  # noqa: F401
+    apss_horizontal,
+    apss_vertical,
+    apss_2d,
+)

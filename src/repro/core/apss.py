@@ -1,0 +1,152 @@
+"""Single-device APSS: the reference oracle and the blocked production path.
+
+``apss_reference`` is the pure-jnp oracle every other implementation (blocked,
+Pallas kernel, all distributed variants) is validated against. It is the moral
+equivalent of the paper's *all-pairs-0-array*: a dense score accumulator
+(``S = D·Dᵀ``) filtered at threshold ``t`` — which the paper measured to be the
+fastest sequential algorithm, and which maps 1:1 onto the MXU.
+
+``apss_blocked`` is the tiled form (the paper's §5.1.9 "processing in vector
+blocks", which also is the natural TPU shape): queries are processed in row
+blocks of ``block_rows`` against the full corpus, with a running top-k match
+buffer. Block-level pruning masks (``core.pruning``) can be threaded through to
+account (and, in the Pallas kernel, actually skip) provably-dead tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matches import Matches, extract_matches, merge_matches
+from repro.core.pruning import block_prune_mask, prune_stats, PruneStats
+
+
+def normalize_rows(D: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """L2-normalize rows (the paper assumes ``||x|| = 1``)."""
+    nrm = jnp.linalg.norm(D.astype(jnp.float32), axis=-1, keepdims=True)
+    return (D / jnp.maximum(nrm, eps)).astype(D.dtype)
+
+
+def pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    """Zero-pad axis 0 to a multiple; returns (padded, original_len)."""
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem:
+        x = jnp.pad(x, ((0, rem),) + ((0, 0),) * (x.ndim - 1))
+    return x, n
+
+
+def apss_reference(
+    D: jax.Array,
+    threshold: float,
+    k: int = 32,
+    *,
+    exclude_self: bool = True,
+) -> Matches:
+    """Oracle APSS self-join: dense ``D·Dᵀ``, threshold, per-row top-k.
+
+    O(n²m) FLOPs, O(n²) memory — only for validation-scale inputs.
+    """
+    S = jnp.einsum(
+        "im,jm->ij", D, D, preferred_element_type=jnp.float32
+    )
+    return extract_matches(S, threshold, k, exclude_self=exclude_self)
+
+
+def similarity_topk(
+    Q: jax.Array,
+    C: jax.Array,
+    threshold: float,
+    k: int = 32,
+    *,
+    block_rows: int = 512,
+    exclude_self: bool = False,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+    col_valid: Optional[jax.Array] = None,
+) -> Matches:
+    """Blocked similarity join of queries ``Q (nq, m)`` vs corpus ``C (nc, m)``.
+
+    Streams ``block_rows`` queries at a time so peak memory is
+    ``O(block_rows · nc)`` instead of ``O(nq · nc)``. This is the workhorse for
+    both the APSS self-join (``Q is C``) and retrieval scoring
+    (1 query × 10⁶ candidates: ``nq = 1`` padded to a block).
+    """
+    nq = Q.shape[0]
+    Qp, _ = pad_rows(Q, block_rows)
+    nblocks = Qp.shape[0] // block_rows
+    Qb = Qp.reshape(nblocks, block_rows, Q.shape[1])
+
+    def body(carry, inputs):
+        blk_idx, q_blk = inputs
+        s = jnp.einsum("im,jm->ij", q_blk, C, preferred_element_type=jnp.float32)
+        m = extract_matches(
+            s,
+            threshold,
+            k,
+            row_offset=row_offset + blk_idx * block_rows,
+            col_offset=col_offset,
+            exclude_self=exclude_self,
+            col_valid=col_valid,
+        )
+        return carry, m
+
+    _, ms = jax.lax.scan(body, 0, (jnp.arange(nblocks), Qb))
+    out = jax.tree.map(lambda x: x.reshape(-1, *x.shape[2:]), ms)
+    return jax.tree.map(lambda x: x[:nq], out)
+
+
+def apss_blocked(
+    D: jax.Array,
+    threshold: float,
+    k: int = 32,
+    *,
+    block_rows: int = 512,
+    with_prune_stats: bool = False,
+    use_kernel: bool = False,
+) -> Matches | tuple[Matches, PruneStats]:
+    """Blocked APSS self-join with optional block-prune accounting.
+
+    ``use_kernel=True`` routes the score computation through the Pallas
+    ``apss_block`` kernel (fused threshold + ``@pl.when`` tile skipping from
+    the maxweight bound mask — MXU work for provably-dead tiles is actually
+    skipped on TPU; interpret mode on CPU). The XLA path computes every tile
+    and uses the mask for accounting only. Exactness is independent of the
+    mask; see ``core.pruning``.
+    """
+    if use_kernel:
+        m = _apss_blocked_kernel(D, threshold, k, block_rows=block_rows)
+    else:
+        m = similarity_topk(
+            D, D, threshold, k, block_rows=block_rows, exclude_self=True
+        )
+    if not with_prune_stats:
+        return m
+    Dp, _ = pad_rows(D, block_rows)
+    mask = block_prune_mask(Dp, Dp, threshold, block_rows)
+    return m, prune_stats(mask)
+
+
+def _apss_blocked_kernel(D, threshold, k, *, block_rows):
+    """Kernel-backed self-join: thresholded score tiles from Pallas, then
+    match extraction per row block (scores below t arrive as exact 0)."""
+    from repro.kernels.apss_block.ops import apss_block_matmul
+
+    n = D.shape[0]
+    bm = min(max(128, block_rows), 256)
+    s = apss_block_matmul(
+        D, D, float(threshold), block_m=bm, block_n=bm,
+        block_k=min(512, max(128, D.shape[1])),
+    )
+    # The kernel zeroes sub-threshold entries; extract on the dense result.
+    # Self-pairs sit on the diagonal and are masked by extract_matches.
+    return extract_matches(s, threshold, k, exclude_self=True)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "k", "block_rows"))
+def apss_blocked_jit(D, threshold: float, k: int = 32, block_rows: int = 512):
+    return apss_blocked(D, threshold, k, block_rows=block_rows)

@@ -1,0 +1,13 @@
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_corpus,
+    corpus_stats,
+    PAPER_DATASETS,
+    paper_like_corpus,
+)
+from repro.data.pipeline import (  # noqa: F401
+    LMDataPipeline,
+    RecsysPipeline,
+    GraphPipeline,
+)
+from repro.data.sampler import neighbor_sample  # noqa: F401
+from repro.data.dedup import dedup_corpus  # noqa: F401

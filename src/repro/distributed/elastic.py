@@ -1,0 +1,106 @@
+"""Elastic re-mesh: reshard a checkpointed state to a different device count.
+
+The fault-tolerance story at 1000+ nodes (DESIGN.md §5): when a pod/node is
+lost, training resumes from the latest checkpoint on a *smaller* mesh, and
+scales back up when capacity returns. Checkpoints are stored as full
+(unsharded) host arrays per leaf (``repro.checkpoint``), so resharding is a
+pure placement problem: build the new mesh, re-derive the PartitionSpecs
+(they are mesh-shape-agnostic by construction — axis names are filtered
+against the mesh), and ``device_put`` each leaf.
+
+``ElasticPlan`` also re-derives the data-pipeline sharding so global batch
+and RNG streams stay consistent across a rescale (same global batch, new
+per-device slice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """A concrete rescale: old mesh shape → new mesh shape."""
+
+    new_mesh: Mesh
+    reason: str = ""
+
+    def describe(self) -> str:
+        return (
+            f"ElasticPlan(mesh={dict(self.new_mesh.shape)}, "
+            f"devices={self.new_mesh.devices.size}, reason={self.reason!r})"
+        )
+
+
+def make_elastic_mesh(
+    n_devices: int,
+    *,
+    model_parallel: int,
+    axis_names=("data", "model"),
+    devices=None,
+) -> Mesh:
+    """Largest mesh of the requested shape family that fits ``n_devices``.
+
+    Keeps the model axis fixed (TP degree is a property of the model, not of
+    cluster capacity) and shrinks the data axis — the standard elastic
+    policy: losing nodes costs data parallelism, never model correctness.
+    """
+    if devices is None:
+        devices = jax.devices()
+    devices = devices[:n_devices]
+    data = len(devices) // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"{len(devices)} devices cannot host model_parallel={model_parallel}"
+        )
+    usable = devices[: data * model_parallel]
+    arr = np.array(usable).reshape(data, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def _filter_spec_for(mesh: Mesh, spec: P) -> P:
+    def keep(part):
+        if part is None:
+            return None
+        if isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a in mesh.shape)
+            return kept if kept else None
+        return part if part in mesh.shape else None
+
+    return P(*(keep(part) for part in spec))
+
+
+def reshard_tree(
+    host_state: Any,
+    specs: Any,
+    new_mesh: Mesh,
+) -> Any:
+    """Place a host-side (numpy) state pytree onto a new mesh.
+
+    ``specs`` is the pytree of PartitionSpecs used at the original scale;
+    axis names missing from the new mesh degrade to replication, so the same
+    spec tree drives every scale (including single-host debugging).
+    """
+
+    def place(x, spec):
+        ns = NamedSharding(new_mesh, _filter_spec_for(new_mesh, spec))
+        return jax.device_put(x, ns)
+
+    return jax.tree.map(
+        place, host_state, specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def rescale(
+    checkpoint_load: Callable[[], Any],
+    specs: Any,
+    plan: ElasticPlan,
+) -> Any:
+    """Full elastic rescale: load latest checkpoint → place on the new mesh."""
+    state = checkpoint_load()
+    return reshard_tree(state, specs, plan.new_mesh)

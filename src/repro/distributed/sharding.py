@@ -1,0 +1,110 @@
+"""Sharding context: mesh-aware ``with_sharding_constraint`` that degrades to
+a no-op on a single device (so model code is identical in smoke tests and on
+the production mesh).
+
+Conventions (DESIGN.md §5):
+  - batch-like dims        → ``("pod", "data")`` (whichever exist)
+  - hidden/feature dims    → ``"model"`` (tensor parallel)
+  - expert dim             → ``"model"`` (expert parallel)
+  - decode KV cache (500k) → sequence dim over ``"data"``
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def active_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    """Activate a mesh for :func:`shard` constraints within the block."""
+    prev = active_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _filter_spec(mesh: Mesh, spec: P) -> P:
+    """Drop axis names the mesh does not have (lets one model definition run
+    on (data, model), (pod, data, model) and single-device meshes)."""
+    def keep(part):
+        if part is None:
+            return None
+        if isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a in mesh.shape)
+            return kept if kept else None
+        return part if part in mesh.shape else None
+
+    return P(*(keep(part) for part in spec))
+
+
+def shard(x: jax.Array, *spec_parts) -> jax.Array:
+    """``with_sharding_constraint(x, P(*spec_parts))`` under the active mesh;
+    identity when no mesh is active (single-device tests)."""
+    mesh = active_mesh()
+    if mesh is None or len(mesh.shape) == 0:
+        return x
+    spec = _filter_spec(mesh, P(*spec_parts))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def data_axes() -> tuple:
+    """Batch-sharding axes present in the active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def model_axis() -> str | None:
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return None
+    return "model"
+
+
+def batch_spec(*trailing) -> P:
+    """P(("pod","data"), *trailing) filtered to the active mesh."""
+    axes = data_axes()
+    lead = axes if axes else None
+    return P(lead, *trailing)
+
+
+def shard_batch(x: jax.Array, *trailing) -> jax.Array:
+    axes = data_axes()
+    if not axes:
+        return x
+    return shard(x, axes, *trailing)
+
+
+def shard_params(params, specs):
+    """Apply a pytree of PartitionSpecs as constraints (no-op w/o mesh)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return params
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, _filter_spec(mesh, s))
+        ),
+        params,
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named_sharding(spec: P) -> NamedSharding | None:
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _filter_spec(mesh, spec))

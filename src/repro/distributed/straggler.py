@@ -1,0 +1,74 @@
+"""Straggler detection: per-step timing ledger + slow-rank reporting.
+
+On a synchronous SPMD cluster one slow host stalls every step. The launcher
+records per-step wall times (and, multi-host, per-host times gathered out of
+band); ranks consistently slower than ``median × tolerance`` are reported so
+the orchestration layer can drain/replace them at the next elastic
+checkpoint boundary (see ``distributed.elastic``).
+
+Mitigations wired into the training loop:
+- timing ledger + exponential moving averages per rank,
+- a step-deadline watchdog (flag, not kill — SPMD can't preempt a peer),
+- checkpoint-boundary remap recommendation (``StragglerReport.evict``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    rank_ema: dict
+    median_ema: float
+    evict: list
+    tolerance: float
+
+    def __str__(self) -> str:
+        bad = ", ".join(f"rank{r}: {t*1e3:.1f}ms" for r, t in self.rank_ema.items() if r in self.evict)
+        return (
+            f"StragglerReport(median={self.median_ema*1e3:.1f}ms, "
+            f"tolerance={self.tolerance}x, evict=[{bad}])"
+        )
+
+
+class StepTimer:
+    """Per-rank step-time ledger with EMA-based straggler detection."""
+
+    def __init__(self, *, ema: float = 0.9, tolerance: float = 1.5, window: int = 64):
+        self.ema_coeff = ema
+        self.tolerance = tolerance
+        self.rank_ema: dict = {}
+        self.history: dict = defaultdict(lambda: deque(maxlen=window))
+        self._start: float | None = None
+
+    def start(self) -> None:
+        self._start = time.perf_counter()
+
+    def stop(self, rank: int = 0) -> float:
+        assert self._start is not None, "start() not called"
+        dt = time.perf_counter() - self._start
+        self._start = None
+        self.record(rank, dt)
+        return dt
+
+    def record(self, rank: int, step_time: float) -> None:
+        prev = self.rank_ema.get(rank)
+        self.rank_ema[rank] = (
+            step_time
+            if prev is None
+            else self.ema_coeff * prev + (1 - self.ema_coeff) * step_time
+        )
+        self.history[rank].append(step_time)
+
+    def report(self) -> StragglerReport:
+        if not self.rank_ema:
+            return StragglerReport({}, 0.0, [], self.tolerance)
+        times = sorted(self.rank_ema.values())
+        median = times[len(times) // 2]
+        evict = [
+            r for r, t in self.rank_ema.items() if t > self.tolerance * median
+        ]
+        return StragglerReport(dict(self.rank_ema), median, evict, self.tolerance)

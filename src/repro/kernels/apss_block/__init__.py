@@ -1,0 +1,2 @@
+from repro.kernels.apss_block.ops import apss_block_matmul  # noqa: F401
+from repro.kernels.apss_block.ref import apss_block_reference  # noqa: F401

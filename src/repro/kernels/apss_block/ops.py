@@ -1,0 +1,79 @@
+"""Public jit'd wrapper for the apss_block kernel.
+
+Handles padding to tile multiples, optional automatic bound-mask computation
+(``core.pruning``), and the CPU/TPU dispatch (interpret mode off-TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import block_prune_mask
+from repro.kernels.apss_block.apss_block import apss_block_pallas
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "block_m", "block_n", "block_k",
+        "auto_mask", "interpret",
+    ),
+)
+def apss_block_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    threshold: float,
+    *,
+    block_mask: jax.Array | None = None,
+    auto_mask: bool = True,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Thresholded similarity tile ``where(X·Yᵀ ≥ t, ·, 0)`` with tile
+    skipping.
+
+    If ``block_mask`` is None and ``auto_mask``, the maxweight/minsize bound
+    mask is computed on the fly (one cheap summary matmul); pass
+    ``auto_mask=False`` to run fully dense.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    n_rows, m = x.shape
+    n_cols = y.shape[0]
+    xp = _pad_to(x, block_m, block_k)
+    yp = _pad_to(y, block_n, block_k)
+    grid_m = xp.shape[0] // block_m
+    grid_n = yp.shape[0] // block_n
+
+    if block_mask is None:
+        if auto_mask:
+            block_mask = block_prune_mask(
+                xp, yp, threshold, block_m, block_n, use_minsize=False
+            )
+        else:
+            block_mask = jnp.ones((grid_m, grid_n), jnp.int32)
+
+    out = apss_block_pallas(
+        xp, yp, block_mask, threshold,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:n_rows, :n_cols]

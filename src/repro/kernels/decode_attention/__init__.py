@@ -1,0 +1,8 @@
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention,
+    combine_partials,
+)
+from repro.kernels.decode_attention.ref import (  # noqa: F401
+    decode_attention_reference,
+    decode_partials_reference,
+)

@@ -1,0 +1,63 @@
+"""Public wrappers: single-shard decode attention + shard combine."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas,
+)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret")
+)
+def decode_attention(
+    q: jax.Array,        # (B, Hq, D)
+    k: jax.Array,        # (B, Hkv, L, D)
+    v: jax.Array,        # (B, Hkv, L, D)
+    lengths: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+    block_k: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Normalized decode attention over one cache shard ``(B, Hq, D)``."""
+    acc, m, l = decode_attention_partials(
+        q, k, v, lengths, scale=scale, block_k=block_k, interpret=interpret
+    )
+    return acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+
+
+def decode_attention_partials(
+    q, k, v, lengths, *, scale=None, block_k=1024, interpret=None
+):
+    """Unnormalized flash-decode partials ``(acc, m, l)`` for shard combine."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L = k.shape[2]
+    bk = min(block_k, L)
+    pad = (-L) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return decode_attention_pallas(
+        q, k, v, lengths.astype(jnp.int32),
+        scale=scale, block_k=bk, interpret=interpret,
+    )
+
+
+def combine_partials(
+    accs: jax.Array,  # (P, B, Hq, D)
+    ms: jax.Array,    # (P, B, Hq)
+    ls: jax.Array,    # (P, B, Hq)
+) -> jax.Array:
+    """Exact logsumexp-monoid merge of per-shard decode partials."""
+    m_star = jnp.max(ms, axis=0)
+    w = jnp.exp(ms - m_star[None])
+    num = jnp.sum(accs * w[..., None], axis=0)
+    den = jnp.sum(ls * w, axis=0)
+    return num / jnp.where(den == 0.0, 1.0, den)[..., None]

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for flash-decode attention partials and their combine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_partials_reference(
+    q: jax.Array,        # (B, Hq, D) one new token per sequence
+    k: jax.Array,        # (B, Hkv, L, D) local KV-cache shard
+    v: jax.Array,        # (B, Hkv, L, D)
+    lengths: jax.Array,  # (B,) valid cache length per sequence (local shard)
+    *,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unnormalized partial attention over a local cache shard.
+
+    Returns ``(acc, m, l)`` with ``acc = Σ exp(s - m)·v``, ``m = max s``,
+    ``l = Σ exp(s - m)`` — the logsumexp-monoid partial that
+    :func:`combine_partials_reference` merges across shards. This mirrors the
+    paper's vertical partial-score accumulation with (max, Σexp) replacing
+    (+).
+    """
+    b, hq, d = q.shape
+    hkv, L = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)  # (B, Hq, L, D)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhd,bhld->bhl", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(L)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(valid, s, -0.5e30)
+    m = jnp.max(s, axis=-1, keepdims=True)          # (B, Hq, 1)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)          # (B, Hq, 1)
+    acc = jnp.einsum("bhl,bhld->bhd", p, vx.astype(jnp.float32))
+    return acc, m[..., 0], l[..., 0]
+
+
+def combine_partials_reference(
+    accs: jax.Array,  # (P, B, Hq, D)
+    ms: jax.Array,    # (P, B, Hq)
+    ls: jax.Array,    # (P, B, Hq)
+) -> jax.Array:
+    m_star = jnp.max(ms, axis=0)                       # (B, Hq)
+    w = jnp.exp(ms - m_star[None])                     # (P, B, Hq)
+    num = jnp.sum(accs * w[..., None], axis=0)
+    den = jnp.sum(ls * w, axis=0)
+    return num / jnp.where(den == 0.0, 1.0, den)[..., None]
+
+
+def decode_attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Full (single-shard) decode attention oracle ``(B, Hq, D)``."""
+    acc, m, l = decode_partials_reference(q, k, v, lengths, scale=scale)
+    return acc / jnp.where(l == 0.0, 1.0, l)[..., None]

@@ -1,0 +1,51 @@
+"""Public jit'd wrapper for flash attention (padding + dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Causal GQA flash attention ``(B, Hq, S, D) → (B, Hq, S, D)``.
+
+    Sequence lengths are padded to the tile size internally; for causal
+    attention trailing padded queries attend only to themselves and are
+    sliced away, so padding never changes visible outputs.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, s, d = q.shape
+    bq = min(block_q, max(128, 1 << (s - 1).bit_length()))
+    bk = min(block_k, bq)
+    pad = (-s) % max(bq, bk)
+    if pad and not causal:
+        # Zero-padded keys are only provably masked under causal attention.
+        raise ValueError("non-causal flash_attention requires tile-divisible S")
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, scale=scale, causal=causal,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :, :s, :]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for causal GQA attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, kx, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        logits = jnp.where(qi >= ki, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bhkd->bhqd", w, vx.astype(jnp.float32)
+    )
+    return out.astype(q.dtype)

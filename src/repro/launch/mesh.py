@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (not module-level state) so importing this module never
+touches jax device initialization — critical because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init,
+while smoke tests must see the 1 real device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips) mesh.
+
+    Axes: ``pod`` (DCN between pods), ``data`` (DP / batch / APSS rows),
+    ``model`` (TP / EP / APSS dims).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (8 forced host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,247 @@
+"""Training step factories + the end-to-end training driver.
+
+``make_*_train_step`` return pure ``(params, opt_state, batch) → (params,
+opt_state, metrics)`` functions; the driver composes them with the data
+pipeline, checkpoint manager (async, keep-k, auto-resume), straggler timer
+and (optionally) APSS-dedup of the input stream.
+
+CLI (CPU-scale, reduced configs):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 20 --batch 8 --seq 128 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import StepTimer, use_mesh
+from repro.models import gnn, recsys
+from repro.models.transformer import TransformerConfig, init_transformer, transformer_loss
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyperparams:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], tuple],
+    hp: TrainHyperparams = TrainHyperparams(),
+    *,
+    accum_steps: int = 1,
+) -> Callable:
+    """Generic train step from a ``loss_fn(params, batch) -> (loss, aux)``.
+
+    With ``accum_steps > 1`` the global batch is split into microbatches
+    scanned sequentially with f32 gradient accumulation: live activation
+    memory divides by N at the cost of re-reading weights N× (the classic
+    memory↔bandwidth trade, measured in EXPERIMENTS.md §Perf).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            # Microbatches via dynamic_slice on the batch dim (NOT reshape:
+            # reshaping a data-sharded leading dim trips SPMD partitioning).
+            def micro_slice(i):
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum_steps),
+                        x.shape[0] // accum_steps, axis=0,
+                    ),
+                    batch,
+                )
+
+            def body(carry, i):
+                g_acc, loss_acc = carry
+                (loss, aux), g = grads_of(params, micro_slice(i))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + loss), aux
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (g_sum, loss_sum), auxs = jax.lax.scan(
+                body, (g0, jnp.float32(0)), jnp.arange(accum_steps)
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = loss_sum / accum_steps
+            aux = jax.tree.map(lambda x: x[-1], auxs)
+        lr = cosine_schedule(
+            opt_state.step, hp.lr, hp.warmup_steps, hp.total_steps
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params,
+            lr=lr, b1=hp.b1, b2=hp.b2,
+            weight_decay=hp.weight_decay, clip_norm=hp.clip_norm,
+        )
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_lm_train_step(cfg: TransformerConfig, hp: TrainHyperparams = TrainHyperparams()):
+    return make_train_step(
+        lambda p, b: transformer_loss(p, cfg, b), hp,
+        accum_steps=getattr(cfg, "grad_accum", 1),
+    )
+
+
+def make_gat_train_step(cfg: gnn.GATConfig, hp: TrainHyperparams = TrainHyperparams()):
+    return make_train_step(lambda p, b: gnn.gat_loss(p, cfg, b), hp)
+
+
+def make_recsys_train_step(cfg, hp: TrainHyperparams = TrainHyperparams()):
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        loss = lambda p, b: recsys.two_tower_loss(p, cfg, b)
+    elif isinstance(cfg, recsys.Bert4RecConfig):
+        loss = lambda p, b: recsys.bert4rec_loss(p, cfg, b)
+    elif isinstance(cfg, recsys.DINConfig):
+        loss = lambda p, b: recsys.din_loss(p, cfg, b)
+    elif isinstance(cfg, recsys.BSTConfig):
+        loss = lambda p, b: recsys.bst_loss(p, cfg, b)
+    else:
+        raise TypeError(type(cfg))
+    return make_train_step(loss, hp)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end driver
+# ---------------------------------------------------------------------------
+
+
+def train_loop(
+    *,
+    arch: str,
+    steps: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    mesh=None,
+    smoke_overrides: dict | None = None,
+    log_every: int = 10,
+) -> dict:
+    """Run a real training loop on the current devices (reduced configs).
+
+    Returns the final metrics. This is the runnable end-to-end example used
+    by ``examples/train_lm.py`` — data pipeline → jit'd step → async
+    checkpoints → auto-resume → straggler ledger.
+    """
+    from repro.configs.base import get_arch
+    from repro.data import LMDataPipeline, RecsysPipeline, GraphPipeline
+
+    arch_def = get_arch(arch)
+    cfg = arch_def.make_smoke_config()
+    if smoke_overrides:
+        cfg = dataclasses.replace(cfg, **smoke_overrides)
+
+    key = jax.random.key(0)
+    hp = TrainHyperparams(warmup_steps=max(2, steps // 10), total_steps=steps)
+
+    if arch_def.family == "lm":
+        params = init_transformer(key, cfg)
+        step_fn = make_lm_train_step(cfg, hp)
+        pipe = LMDataPipeline(
+            vocab_size=cfg.vocab_size, batch_size=4,
+            seq_len=min(128, 4 * cfg.loss_chunk), seed=0,
+        )
+        get_batch = lambda s: jax.tree.map(jnp.asarray, pipe.get_batch(s))
+    elif arch_def.family == "gnn":
+        params = gnn.init_gat(key, cfg)
+        step_fn = make_gat_train_step(cfg, hp)
+        pipe = GraphPipeline(n_nodes=512, n_edges=4096, d_feat=cfg.d_feat,
+                             n_classes=cfg.n_classes)
+        g = jax.tree.map(jnp.asarray, pipe.full_graph())
+        get_batch = lambda s: g
+    else:
+        if isinstance(cfg, recsys.TwoTowerConfig):
+            params = recsys.init_two_tower(key, cfg)
+            pipe = RecsysPipeline(n_items=cfg.n_items, batch_size=32,
+                                  history_len=cfg.history_len,
+                                  n_user_fields=cfg.n_user_fields,
+                                  user_vocab=cfg.user_vocab, kind="two-tower")
+        elif isinstance(cfg, recsys.Bert4RecConfig):
+            params = recsys.init_bert4rec(key, cfg)
+            pipe = RecsysPipeline(n_items=cfg.n_items, batch_size=32,
+                                  history_len=cfg.seq_len, kind="seq")
+        elif isinstance(cfg, recsys.DINConfig):
+            params = recsys.init_din(key, cfg)
+            pipe = RecsysPipeline(n_items=cfg.n_items, batch_size=32,
+                                  history_len=cfg.seq_len, kind="ctr")
+        else:
+            params = recsys.init_bst(key, cfg)
+            pipe = RecsysPipeline(n_items=cfg.n_items, batch_size=32,
+                                  history_len=cfg.seq_len - 1, kind="ctr")
+        step_fn = make_recsys_train_step(cfg, hp)
+        get_batch = lambda s: jax.tree.map(jnp.asarray, pipe.get_batch(s))
+
+    opt_state = adamw_init(params)
+    start_step = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=3)
+        like = {"params": params, "opt": opt_state}
+        restored, at = mgr.restore(like=like)
+        if restored is not None:
+            params = jax.tree.map(jnp.asarray, restored["params"])
+            opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+            start_step = at
+            print(f"[train] resumed from step {at}")
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    timer = StepTimer()
+    metrics = {}
+    with use_mesh(mesh):
+        for s in range(start_step, steps):
+            batch = get_batch(s)
+            timer.start()
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            timer.stop(0)
+            if s % log_every == 0 or s == steps - 1:
+                print(
+                    f"[train] step {s} loss={float(metrics['loss']):.4f} "
+                    f"gnorm={float(metrics.get('grad_norm', 0)):.2f} "
+                    f"({timer.rank_ema.get(0, 0)*1e3:.0f} ms/step)"
+                )
+            if mgr and (s + 1) % ckpt_every == 0:
+                mgr.save({"params": params, "opt": opt_state}, s + 1, blocking=False)
+    if mgr:
+        mgr.save({"params": params, "opt": opt_state}, steps, blocking=True)
+    return {k: float(v) for k, v in metrics.items() if jnp.ndim(v) == 0}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    out = train_loop(arch=args.arch, steps=args.steps, ckpt_dir=args.ckpt_dir)
+    print("[train] final:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: LM transformers (GQA / qk-norm / MLA / MoE), recsys models,
+and GNNs — all pure-function JAX (params as pytrees, explicit RNG)."""
+
+from repro.models.transformer import (  # noqa: F401
+    TransformerConfig,
+    init_transformer,
+    transformer_loss,
+    transformer_logits,
+    prefill,
+    decode_step,
+)
+from repro.models import recsys, gnn  # noqa: F401

@@ -1,0 +1,143 @@
+"""GNN family: GAT (arXiv:1710.10903) via edge-index message passing.
+
+JAX sparse is BCOO-only, so message passing is built from first principles
+on padded edge lists: SDDMM-style per-edge attention scores →
+segment-softmax over destination nodes (``segment_max`` + ``segment_sum``)
+→ scatter-sum aggregation. This IS the system's sparse kernel layer (see
+kernel_taxonomy §GNN: GAT = SDDMM → segment-softmax → SpMM).
+
+The similarity-graph connection (the paper's headline application): edges
+can come straight from ``core.apss`` matches via
+``core.graph.coo_to_padded_edges`` — `examples/similarity_graph.py` builds
+the ε-neighborhood graph with the paper's algorithm and trains this GAT on
+it.
+
+Graph batches are dicts of padded arrays:
+  features (N, F) · edge_src (E,) · edge_dst (E,) · edge_mask (E,) ·
+  labels (N,) · label_mask (N,)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_feat: int = 1433
+    n_classes: int = 7
+    negative_slope: float = 0.2
+    dtype: Any = jnp.float32
+
+
+def init_gat(key, cfg: GATConfig) -> dict:
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        last = i == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        heads = 1 if last else cfg.n_heads
+        layers.append({
+            "w": dense_init(k1, d_in, heads * d_out, cfg.dtype),
+            "a_src": (jax.random.normal(k2, (heads, d_out), jnp.float32) * 0.1).astype(cfg.dtype),
+            "a_dst": (jax.random.normal(k3, (heads, d_out), jnp.float32) * 0.1).astype(cfg.dtype),
+        })
+        d_in = d_out if last else cfg.d_hidden * cfg.n_heads
+    return {"layers": layers}
+
+
+def gat_param_specs(cfg: GATConfig) -> dict:
+    # GAT params are tiny (d_hidden=8) — replicate them; the parallelism in
+    # GNN training lives in the node/edge data sharding, not the weights.
+    return {
+        "layers": [
+            {"w": P(None, None), "a_src": P(None, None), "a_dst": P(None, None)}
+            for _ in range(cfg.n_layers)
+        ]
+    }
+
+
+def segment_softmax(
+    scores: jax.Array,       # (E, H)
+    segments: jax.Array,     # (E,) destination node per edge
+    num_segments: int,
+    edge_mask: jax.Array,    # (E,)
+) -> jax.Array:
+    """Numerically-stable softmax over incoming edges of each node."""
+    neg = jnp.float32(-1e30)
+    s = jnp.where(edge_mask[:, None] > 0, scores.astype(jnp.float32), neg)
+    smax = jax.ops.segment_max(s, segments, num_segments=num_segments)
+    smax = jnp.maximum(smax, neg)  # empty segments
+    ex = jnp.exp(s - smax[segments]) * edge_mask[:, None]
+    denom = jax.ops.segment_sum(ex, segments, num_segments=num_segments)
+    return ex / jnp.maximum(denom[segments], 1e-16)
+
+
+def gat_layer(
+    p: dict,
+    x: jax.Array,          # (N, F)
+    edge_src: jax.Array,   # (E,)
+    edge_dst: jax.Array,   # (E,)
+    edge_mask: jax.Array,  # (E,)
+    *,
+    heads: int,
+    d_out: int,
+    negative_slope: float,
+    concat: bool,
+) -> jax.Array:
+    n = x.shape[0]
+    h = jnp.einsum("nf,fe->ne", x, p["w"]).reshape(n, heads, d_out)
+    # SDDMM: per-edge attention logits from endpoint projections.
+    alpha_src = jnp.einsum("nhd,hd->nh", h.astype(jnp.float32), p["a_src"].astype(jnp.float32))
+    alpha_dst = jnp.einsum("nhd,hd->nh", h.astype(jnp.float32), p["a_dst"].astype(jnp.float32))
+    e = alpha_src[edge_src] + alpha_dst[edge_dst]                 # (E, H)
+    e = jax.nn.leaky_relu(e, negative_slope)
+    att = segment_softmax(e, edge_dst, n, edge_mask)              # (E, H)
+    # SpMM: attention-weighted scatter-sum of source features.
+    msg = h[edge_src].astype(jnp.float32) * att[..., None]        # (E, H, D)
+    agg = jax.ops.segment_sum(msg, edge_dst, num_segments=n)      # (N, H, D)
+    if concat:
+        return agg.reshape(n, heads * d_out).astype(x.dtype)
+    return jnp.mean(agg, axis=1).astype(x.dtype)
+
+
+def gat_forward(params, cfg: GATConfig, batch) -> jax.Array:
+    x = batch["features"]
+    src, dst, mask = batch["edge_src"], batch["edge_dst"], batch["edge_mask"]
+    for i, p in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        x = gat_layer(
+            p, x, src, dst, mask,
+            heads=heads, d_out=d_out,
+            negative_slope=cfg.negative_slope, concat=not last,
+        )
+        if not last:
+            x = jax.nn.elu(x)
+    return x  # (N, n_classes) logits
+
+
+def gat_loss(params, cfg: GATConfig, batch) -> tuple[jax.Array, dict]:
+    logits = gat_forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch["label_mask"].astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (lse - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum((pred == labels) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "acc": acc}

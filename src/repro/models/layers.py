@@ -1,0 +1,214 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Attention comes in three memory regimes:
+
+- :func:`chunked_attention` — the flash algorithm expressed in XLA (scan over
+  KV chunks with running (m, l, acc)); O(S·chunk) memory instead of O(S²).
+  This is the train/prefill path everywhere the Pallas kernel isn't used
+  (the CPU dry-run compiles this).
+- :func:`repro.kernels.flash_attention` — the Pallas TPU kernel (same math).
+- :func:`decode_attention_xla` (+ sequence-sharded variant in
+  ``transformer.py``) — single-token decode over a KV cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_LARGE = -0.5e30
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """QK-norm: RMS over the head dim of ``(..., H, D)`` activations."""
+    return rms_norm(x, scale, eps)
+
+
+# -- rotary position embedding -------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,            # (B, S, H, D)
+    positions: jax.Array,    # (B, S)
+    theta: float = 1e6,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,   # (B, Hq, S, D)
+    k: jax.Array,   # (B, Hkv, S, D)
+    v: jax.Array,   # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    probs_dtype=None,
+) -> jax.Array:
+    """Flash attention in XLA: O(S·kv_chunk) live memory, exact softmax.
+
+    Supports distinct QK and V head dims (MLA: qk = nope+rope, v smaller).
+    ``probs_dtype=bf16`` stores the per-chunk probability tensors in bf16
+    (halving the dominant chunk-score HBM traffic; §Perf) with f32
+    accumulation — softmax statistics (m, l) stay f32, so the error is one
+    rounding of p only.
+    """
+    b, hq, s, d = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    def divisor_chunk(n, target):
+        c = min(target, n)
+        while n % c:
+            c -= 1
+        return c
+
+    qc = divisor_chunk(s, q_chunk)
+    kc = divisor_chunk(s, kv_chunk)
+    nq, nk = s // qc, s // kc
+
+    # (B, Hkv, group, S, D) view so the kernel is a plain batched matmul.
+    qg = q.reshape(b, hkv, group, s, d)
+
+    def q_block(carry, qi):
+        qq = lax.dynamic_slice_in_dim(qg, qi * qc, qc, axis=3) * scale
+
+        def kv_block(inner, ki):
+            m_prev, l_prev, acc = inner
+            kk = lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=2)
+            vv = lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=2)
+            sij = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qq, kk,
+                preferred_element_type=jnp.float32,
+            )
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                sij = jnp.where(mask[None, None, None], sij, NEG_LARGE)
+            m_new = jnp.maximum(m_prev, jnp.max(sij, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(sij - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+            pv = p if probs_dtype is None else p.astype(probs_dtype)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", pv, vv,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, group, qc, 1), NEG_LARGE, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, qc, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, qc, dv), jnp.float32)
+        # Causal: KV chunks strictly above the diagonal contribute nothing —
+        # XLA cannot skip them data-dependently inside scan, so we bound the
+        # loop with the static chunk count (full sweep; the Pallas kernel is
+        # where the skip actually saves FLOPs).
+        (m_, l_, acc), _ = lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.where(l_ == 0.0, 1.0, l_)
+        return carry, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_block, None, jnp.arange(nq))
+    # outs: (nq, B, Hkv, group, qc, Dv) → (B, Hq, S, Dv)
+    outs = jnp.moveaxis(outs, 0, 3)                    # (B, Hkv, group, nq, qc, Dv)
+    return outs.reshape(b, hq, s, dv)
+
+
+def decode_attention_xla(
+    q: jax.Array,        # (B, Hq, D)
+    k: jax.Array,        # (B, Hkv, L, D)
+    v: jax.Array,        # (B, Hkv, L, D)
+    lengths: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+    with_partials: bool = False,
+):
+    """Single-token decode attention (XLA path; matvec-bound)."""
+    b, hq, d = q.shape
+    hkv, L = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) * scale
+    s = jnp.einsum(
+        "bhgd,bhld->bhgl", qg, k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    valid = jnp.arange(L)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(valid, s, NEG_LARGE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bhgl,bhld->bhgd", p, v.astype(jnp.float32))
+    if with_partials:
+        return (
+            acc.reshape(b, hq, d),
+            m.reshape(b, hq),
+            l.reshape(b, hq),
+        )
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+# -- MLP ----------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP (LLaMA/Qwen FFN)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp(x: jax.Array, ws: list[jax.Array], bs: list[jax.Array], act=jax.nn.relu) -> jax.Array:
+    """Plain MLP tower (recsys): act on every layer but the last."""
+    h = x
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        h = jnp.einsum("...d,df->...f", h, w) + b
+        if i < len(ws) - 1:
+            h = act(h)
+    return h
+
+
+# -- init helpers ---------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,456 @@
+"""RecSys model family: two-tower retrieval, BERT4Rec, DIN, BST.
+
+The hot path in every ranking/retrieval model is the sparse embedding
+lookup. JAX has no native EmbeddingBag, so :func:`embedding_bag` /
+:func:`embedding_bag_ragged` build it from ``jnp.take`` +
+``jax.ops.segment_sum`` — this IS part of the system (tables are
+vocab-sharded over the ``model`` axis via ``param_specs``; GSPMD turns the
+row gather into collectives).
+
+``retrieval_scores`` (1 query × 10⁶ candidates) routes through
+``repro.core.similarity_topk`` — candidate retrieval is literally the
+paper's similarity problem, and the distributed corpus scoring reuses the
+paper's horizontal distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.apss import similarity_topk
+from repro.core.matches import Matches
+from repro.models.layers import chunked_attention, dense_init, embed_init, mlp, rms_norm
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (take + segment_sum — JAX has no native one)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jax.Array,            # (V, E)
+    ids: jax.Array,              # (B, L) int32, -1 = padding
+    weights: jax.Array | None = None,  # (B, L)
+    *,
+    mode: str = "sum",
+) -> jax.Array:
+    """Fixed-width multi-hot bag lookup: gather rows, mask, reduce."""
+    valid = (ids >= 0).astype(table.dtype)
+    emb = jnp.take(table, jnp.maximum(ids, 0), axis=0)       # (B, L, E)
+    w = valid if weights is None else weights * valid
+    emb = emb * w[..., None]
+    s = jnp.sum(emb, axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(
+    table: jax.Array,        # (V, E)
+    flat_ids: jax.Array,     # (N,) int32
+    segment_ids: jax.Array,  # (N,) int32 bag index per id
+    num_segments: int,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Ragged EmbeddingBag: ``jnp.take`` + ``jax.ops.segment_sum``."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=num_segments)
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (Yi et al., RecSys'19)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_dims: tuple = (1024, 512, 256)
+    n_items: int = 10_000_000
+    n_user_fields: int = 8
+    user_vocab: int = 1_000_000
+    history_len: int = 50
+    temperature: float = 0.05
+    dtype: Any = jnp.float32
+
+
+def init_two_tower(key, cfg: TwoTowerConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    def tower(k, d_in):
+        kk = jax.random.split(k, len(cfg.tower_dims))
+        ws, bs, d = [], [], d_in
+        for i, dout in enumerate(cfg.tower_dims):
+            ws.append(dense_init(kk[i], d, dout, cfg.dtype))
+            bs.append(jnp.zeros((dout,), cfg.dtype))
+            d = dout
+        return {"w": ws, "b": bs}
+    d_user_in = cfg.embed_dim * (cfg.n_user_fields + 1)  # fields + history bag
+    d_item_in = cfg.embed_dim
+    return {
+        "item_table": embed_init(ks[0], cfg.n_items, cfg.embed_dim, cfg.dtype),
+        "user_table": embed_init(ks[1], cfg.user_vocab, cfg.embed_dim, cfg.dtype),
+        "user_tower": tower(ks[2], d_user_in),
+        "item_tower": tower(ks[3], d_item_in),
+    }
+
+
+def two_tower_param_specs(cfg: TwoTowerConfig) -> dict:
+    return {
+        "item_table": P("model", None),
+        "user_table": P("model", None),
+        "user_tower": {"w": [P(None, "model")] * 3, "b": [P("model")] * 3},
+        "item_tower": {"w": [P(None, "model")] * 3, "b": [P("model")] * 3},
+    }
+
+
+def _l2norm(x):
+    return x / jnp.maximum(jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True), 1e-6).astype(x.dtype)
+
+
+def user_embedding(params, cfg: TwoTowerConfig, batch) -> jax.Array:
+    fields = jnp.take(
+        params["user_table"], batch["user_fields"], axis=0
+    )                                                   # (B, F, E)
+    hist = embedding_bag(
+        params["item_table"], batch["history"], mode="mean"
+    )                                                   # (B, E)
+    x = jnp.concatenate(
+        [fields.reshape(fields.shape[0], -1), hist], axis=-1
+    )
+    t = params["user_tower"]
+    return _l2norm(mlp(x, t["w"], t["b"]))
+
+
+def item_embedding(params, cfg: TwoTowerConfig, item_ids) -> jax.Array:
+    x = jnp.take(params["item_table"], item_ids, axis=0)
+    t = params["item_tower"]
+    return _l2norm(mlp(x, t["w"], t["b"]))
+
+
+def two_tower_loss(params, cfg: TwoTowerConfig, batch) -> tuple[jax.Array, dict]:
+    """In-batch sampled softmax with logQ correction."""
+    u = user_embedding(params, cfg, batch)              # (B, E)
+    i = item_embedding(params, cfg, batch["item_ids"])  # (B, E)
+    logits = (u @ i.T).astype(jnp.float32) / cfg.temperature
+    logq = batch.get("sampling_logq")
+    if logq is not None:
+        logits = logits - logq[None, :]
+    labels = jnp.arange(u.shape[0])
+    nll = -jax.nn.log_softmax(logits, axis=-1)[labels, labels]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "in_batch_acc": acc}
+
+
+def two_tower_score(params, cfg: TwoTowerConfig, batch) -> jax.Array:
+    """Pointwise (user, item) scores — serve_p99 / serve_bulk shapes."""
+    u = user_embedding(params, cfg, batch)
+    i = item_embedding(params, cfg, batch["item_ids"])
+    return jnp.sum(u * i, axis=-1) / cfg.temperature
+
+
+def retrieval_scores(
+    params, cfg: TwoTowerConfig, batch, candidate_ids, *, k: int = 256,
+    threshold: float = 0.0, block_rows: int = 4096,
+) -> Matches:
+    """Score one (or few) queries against a large candidate corpus.
+
+    This is the paper's similarity join: corpus embeddings are computed
+    tower-side, then ``similarity_topk`` streams MXU-sized blocks — on a
+    mesh, candidates shard over ``data`` like the horizontal algorithm.
+    """
+    u = user_embedding(params, cfg, batch)              # (Q, E)
+    c = item_embedding(params, cfg, candidate_ids)      # (N, E)
+    return similarity_topk(
+        u, c, threshold, k=k, block_rows=u.shape[0], exclude_self=False
+    )
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690) — bidirectional masked sequence model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_items: int = 60_000
+    d_ff: int = 256
+    dtype: Any = jnp.float32
+
+    @property
+    def mask_token(self) -> int:
+        return self.n_items  # first padding row of the padded table
+
+    @property
+    def padded_items(self) -> int:
+        """Table rows incl. [MASK], padded to 512 for vocab sharding."""
+        return ((self.n_items + 1 + 511) // 512) * 512
+
+
+def init_bert4rec(key, cfg: Bert4RecConfig) -> dict:
+    ks = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    d, h = cfg.embed_dim, cfg.n_heads
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[2 + i], 8)
+        blocks.append({
+            "attn_norm": jnp.ones((d,), cfg.dtype),
+            "wq": dense_init(kk[0], d, d, cfg.dtype),
+            "wk": dense_init(kk[1], d, d, cfg.dtype),
+            "wv": dense_init(kk[2], d, d, cfg.dtype),
+            "wo": dense_init(kk[3], d, d, cfg.dtype),
+            "ffn_norm": jnp.ones((d,), cfg.dtype),
+            "w1": dense_init(kk[4], d, cfg.d_ff, cfg.dtype),
+            "b1": jnp.zeros((cfg.d_ff,), cfg.dtype),
+            "w2": dense_init(kk[5], cfg.d_ff, d, cfg.dtype),
+            "b2": jnp.zeros((d,), cfg.dtype),
+        })
+    return {
+        "item_table": embed_init(ks[0], cfg.padded_items, d, cfg.dtype),
+        "pos_table": embed_init(ks[1], cfg.seq_len, d, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((d,), cfg.dtype),
+    }
+
+
+def bert4rec_param_specs(cfg: Bert4RecConfig) -> dict:
+    blk = {
+        "attn_norm": P(None), "wq": P(None, "model"), "wk": P(None, "model"),
+        "wv": P(None, "model"), "wo": P("model", None), "ffn_norm": P(None),
+        "w1": P(None, "model"), "b1": P("model"),
+        "w2": P("model", None), "b2": P(None),
+    }
+    return {
+        "item_table": P("model", None),
+        "pos_table": P(None, None),
+        "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+        "final_norm": P(None),
+    }
+
+
+def bert4rec_encode(params, cfg: Bert4RecConfig, item_ids) -> jax.Array:
+    b, s = item_ids.shape
+    x = jnp.take(params["item_table"], item_ids, axis=0)
+    x = x + params["pos_table"][None, :s]
+    d, h = cfg.embed_dim, cfg.n_heads
+    hd = d // h
+    for p in params["blocks"]:
+        xn = rms_norm(x, p["attn_norm"])
+        q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, s, h, hd)
+        k = jnp.einsum("bsd,de->bse", xn, p["wk"]).reshape(b, s, h, hd)
+        v = jnp.einsum("bsd,de->bse", xn, p["wv"]).reshape(b, s, h, hd)
+        o = chunked_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            causal=False, q_chunk=min(128, s), kv_chunk=min(128, s),
+        )
+        o = jnp.swapaxes(o, 1, 2).reshape(b, s, d)
+        x = x + jnp.einsum("bsd,de->bse", o, p["wo"])
+        xn = rms_norm(x, p["ffn_norm"])
+        hh = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn, p["w1"]) + p["b1"])
+        x = x + jnp.einsum("bsf,fd->bsd", hh, p["w2"]) + p["b2"]
+    return rms_norm(x, params["final_norm"])
+
+
+def bert4rec_loss(params, cfg: Bert4RecConfig, batch) -> tuple[jax.Array, dict]:
+    """Masked-item prediction (cloze) CE over masked positions."""
+    h = bert4rec_encode(params, cfg, batch["item_ids"])     # (B, S, d)
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h, params["item_table"][: cfg.n_items],
+        preferred_element_type=jnp.float32,
+    )
+    labels = batch["labels"]
+    mask = batch["mask"].astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def bert4rec_score(params, cfg: Bert4RecConfig, batch) -> jax.Array:
+    """Next-item scores from the final position (serving)."""
+    h = bert4rec_encode(params, cfg, batch["item_ids"])
+    return jnp.einsum(
+        "bd,vd->bv", h[:, -1], params["item_table"][: cfg.n_items],
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# DIN (arXiv:1706.06978) — target attention over user history
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_dims: tuple = (80, 40)
+    mlp_dims: tuple = (200, 80)
+    n_items: int = 1_000_000
+    dtype: Any = jnp.float32
+
+
+def init_din(key, cfg: DINConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    e = cfg.embed_dim
+    attn_w, attn_b, d = [], [], 4 * e
+    for i, dout in enumerate((*cfg.attn_dims, 1)):
+        attn_w.append(dense_init(ks[1 + i], d, dout, cfg.dtype))
+        attn_b.append(jnp.zeros((dout,), cfg.dtype))
+        d = dout
+    mlp_w, mlp_b, d = [], [], 2 * e
+    for i, dout in enumerate((*cfg.mlp_dims, 1)):
+        mlp_w.append(dense_init(ks[5 + i], d, dout, cfg.dtype))
+        mlp_b.append(jnp.zeros((dout,), cfg.dtype))
+        d = dout
+    return {
+        "item_table": embed_init(ks[0], cfg.n_items, e, cfg.dtype),
+        "attn": {"w": attn_w, "b": attn_b},
+        "mlp": {"w": mlp_w, "b": mlp_b},
+    }
+
+
+def din_param_specs(cfg: DINConfig) -> dict:
+    return {
+        "item_table": P("model", None),
+        "attn": {"w": [P(None, None)] * 3, "b": [P(None)] * 3},
+        "mlp": {"w": [P(None, None)] * 3, "b": [P(None)] * 3},
+    }
+
+
+def din_logits(params, cfg: DINConfig, batch) -> jax.Array:
+    hist = jnp.take(params["item_table"], jnp.maximum(batch["history"], 0), axis=0)  # (B,S,E)
+    valid = (batch["history"] >= 0).astype(jnp.float32)
+    target = jnp.take(params["item_table"], batch["item_ids"], axis=0)  # (B,E)
+    t = jnp.broadcast_to(target[:, None, :], hist.shape)
+    ai = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)        # (B,S,4E)
+    score = mlp(ai, params["attn"]["w"], params["attn"]["b"], act=jax.nn.sigmoid)[..., 0]
+    score = score * valid                                               # DIN: no softmax
+    pooled = jnp.einsum("bs,bse->be", score, hist)
+    x = jnp.concatenate([pooled, target], axis=-1)
+    return mlp(x, params["mlp"]["w"], params["mlp"]["b"])[..., 0]
+
+
+def din_loss(params, cfg: DINConfig, batch) -> tuple[jax.Array, dict]:
+    logits = din_logits(params, cfg, batch)
+    y = batch["click"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# BST (arXiv:1905.06874) — Behavior Sequence Transformer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20           # history (seq_len-1) + target
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: tuple = (1024, 512, 256)
+    n_items: int = 1_000_000
+    d_ff: int = 128
+    dtype: Any = jnp.float32
+
+
+def init_bst(key, cfg: BSTConfig) -> dict:
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    e = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kk = jax.random.split(ks[2 + i], 8)
+        blocks.append({
+            "wq": dense_init(kk[0], e, e, cfg.dtype),
+            "wk": dense_init(kk[1], e, e, cfg.dtype),
+            "wv": dense_init(kk[2], e, e, cfg.dtype),
+            "wo": dense_init(kk[3], e, e, cfg.dtype),
+            "norm1": jnp.ones((e,), cfg.dtype),
+            "w1": dense_init(kk[4], e, cfg.d_ff, cfg.dtype),
+            "b1": jnp.zeros((cfg.d_ff,), cfg.dtype),
+            "w2": dense_init(kk[5], cfg.d_ff, e, cfg.dtype),
+            "b2": jnp.zeros((e,), cfg.dtype),
+            "norm2": jnp.ones((e,), cfg.dtype),
+        })
+    mlp_w, mlp_b, d = [], [], cfg.seq_len * e
+    kk = jax.random.split(ks[-1], len(cfg.mlp_dims) + 1)
+    for i, dout in enumerate((*cfg.mlp_dims, 1)):
+        mlp_w.append(dense_init(kk[i], d, dout, cfg.dtype))
+        mlp_b.append(jnp.zeros((dout,), cfg.dtype))
+        d = dout
+    return {
+        "item_table": embed_init(ks[0], cfg.n_items, e, cfg.dtype),
+        "pos_table": embed_init(ks[1], cfg.seq_len, e, cfg.dtype),
+        "blocks": blocks,
+        "mlp": {"w": mlp_w, "b": mlp_b},
+    }
+
+
+def bst_param_specs(cfg: BSTConfig) -> dict:
+    blk = {
+        "wq": P(None, "model"), "wk": P(None, "model"), "wv": P(None, "model"),
+        "wo": P("model", None), "norm1": P(None),
+        "w1": P(None, "model"), "b1": P("model"),
+        "w2": P("model", None), "b2": P(None), "norm2": P(None),
+    }
+    return {
+        "item_table": P("model", None),
+        "pos_table": P(None, None),
+        "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+        "mlp": {"w": [P(None, "model"), P("model", None), P(None, None), P(None, None)],
+                "b": [P("model"), P(None), P(None), P(None)]},
+    }
+
+
+def bst_logits(params, cfg: BSTConfig, batch) -> jax.Array:
+    """Sequence = history ++ target item; transformer; concat → MLP → logit."""
+    seq = jnp.concatenate(
+        [batch["history"], batch["item_ids"][:, None]], axis=1
+    )                                                    # (B, S)
+    b, s = seq.shape
+    e, h = cfg.embed_dim, cfg.n_heads
+    hd = e // h
+    x = jnp.take(params["item_table"], jnp.maximum(seq, 0), axis=0)
+    x = x + params["pos_table"][None, :s]
+    for p in params["blocks"]:
+        q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
+        k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, h, hd)
+        v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, h, hd)
+        logits = jnp.einsum("bqhe,bkhe->bhqk", q, k) / (hd ** 0.5)
+        w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhe->bqhe", w, v).reshape(b, s, e)
+        x = rms_norm(x + jnp.einsum("bsd,de->bse", o, p["wo"]), p["norm1"])
+        ff = jnp.einsum("bsf,fd->bsd", jax.nn.relu(
+            jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"]), p["w2"]) + p["b2"]
+        x = rms_norm(x + ff, p["norm2"])
+    flat = x.reshape(b, s * e)
+    return mlp(flat, params["mlp"]["w"], params["mlp"]["b"], act=jax.nn.leaky_relu)[..., 0]
+
+
+def bst_loss(params, cfg: BSTConfig, batch) -> tuple[jax.Array, dict]:
+    logits = bst_logits(params, cfg, batch)
+    y = batch["click"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}

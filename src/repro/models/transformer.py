@@ -1,0 +1,703 @@
+"""Decoder-only LM transformer covering all five assigned LM architectures.
+
+Feature matrix:
+- GQA attention with optional QK-norm (qwen3-1.7b / qwen3-8b)
+- MLA latent attention with absorbed decode (minicpm3-4b)
+- MoE FFN: top-k routed experts + optional shared experts (deepseek-moe-16b)
+  and optional parallel dense-residual FFN (arctic-480b)
+- layer stacking via ``lax.scan`` over stacked params (compile-time sanity at
+  512 devices) with per-layer remat
+- memory-efficient chunked attention (flash-in-XLA) for train/prefill
+- KV-cache decode with *sequence-parallel* attention: the cache's sequence
+  dim is sharded over mesh axes and GSPMD turns the softmax reductions into
+  all-reduces — the logsumexp analogue of the paper's vertical partial-score
+  accumulation. This is how ``long_500k`` (524288-token cache) decodes with
+  full attention at linear cost.
+
+Params are plain nested dicts; sharding is annotated via
+``repro.distributed.sharding.shard`` (no-op on a single device) and
+``param_specs`` (consumed by the launcher / dry-run for in_shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import shard, shard_batch
+from repro.models.layers import (
+    apply_rope,
+    chunked_attention,
+    decode_attention_xla,
+    dense_init,
+    embed_init,
+    rms_norm,
+    swiglu,
+)
+from repro.models.moe import (
+    MoEParams,
+    init_moe,
+    moe_ffn,
+    moe_ffn_ep,
+    moe_param_specs,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention
+    attention: str = "gqa"          # "gqa" | "mla"
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    # MLA dims (minicpm3/deepseek style)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    dense_residual: bool = False    # arctic: dense FFN in parallel with MoE
+    first_k_dense: int = 0          # deepseek: leading dense layers
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # numerics / memory
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 2048
+    # §Perf knobs (EXPERIMENTS.md): bf16 attention probabilities halve the
+    # chunk-score HBM traffic; "ep" MoE dispatch replaces the GSPMD scatter
+    # all-reduce with one TP-shaped psum per layer.
+    bf16_probs: bool = False
+    moe_impl: str = "gspmd"      # "gspmd" | "ep"
+    grad_accum: int = 1          # microbatches per step (activation memory ÷N)
+    # parallelism
+    fsdp: bool = False
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 for TP divisibility (MaxText-style table
+        padding; padded ids are never emitted as labels/tokens)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def qk_head_dim(self) -> int:
+        if self.attention == "mla":
+            return self.qk_nope_dim + self.qk_rope_dim
+        return self.head_dim
+
+    @property
+    def v_dim(self) -> int:
+        return self.v_head_dim if self.attention == "mla" else self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: TransformerConfig) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if cfg.attention == "mla":
+        p = {
+            "wq_a": dense_init(ks[0], d, cfg.q_lora_rank, dt),
+            "q_norm": jnp.ones((cfg.q_lora_rank,), dt),
+            "wq_b": dense_init(
+                ks[1], cfg.q_lora_rank, cfg.n_heads * cfg.qk_head_dim, dt
+            ),
+            "wkv_a": dense_init(
+                ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dt
+            ),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), dt),
+            "wkv_b": dense_init(
+                ks[3],
+                cfg.kv_lora_rank,
+                cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim),
+                dt,
+            ),
+            "wo": dense_init(ks[4], cfg.n_heads * cfg.v_head_dim, d, dt),
+        }
+    else:
+        p = {
+            "wq": dense_init(ks[0], d, cfg.n_heads * cfg.head_dim, dt),
+            "wk": dense_init(ks[1], d, cfg.n_kv_heads * cfg.head_dim, dt),
+            "wv": dense_init(ks[2], d, cfg.n_kv_heads * cfg.head_dim, dt),
+            "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, d, dt),
+        }
+        if cfg.qk_norm:
+            p["q_scale"] = jnp.ones((cfg.head_dim,), dt)
+            p["k_scale"] = jnp.ones((cfg.head_dim,), dt)
+    return p
+
+
+def _init_ffn(key, cfg: TransformerConfig, *, dense_only: bool = False) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if not cfg.moe or dense_only:
+        return {
+            "w_gate": dense_init(ks[0], d, cfg.d_ff, dt),
+            "w_up": dense_init(ks[1], d, cfg.d_ff, dt),
+            "w_down": dense_init(ks[2], cfg.d_ff, d, dt),
+        }
+    p: dict = {"moe": init_moe(ks[0], d, cfg.d_ff_expert, cfg.n_experts, dt)}
+    if cfg.n_shared_experts:
+        f_sh = cfg.n_shared_experts * cfg.d_ff_expert
+        p["shared"] = {
+            "w_gate": dense_init(ks[1], d, f_sh, dt),
+            "w_up": dense_init(ks[2], d, f_sh, dt),
+            "w_down": dense_init(ks[3], f_sh, d, dt),
+        }
+    if cfg.dense_residual:
+        p["dense"] = {
+            "w_gate": dense_init(ks[1], d, cfg.d_ff, dt),
+            "w_up": dense_init(ks[2], d, cfg.d_ff, dt),
+            "w_down": dense_init(ks[3], cfg.d_ff, d, dt),
+        }
+    return p
+
+
+def _init_block(key, cfg: TransformerConfig, *, dense_only: bool = False) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": _init_attn(k1, cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ffn": _init_ffn(k2, cfg, dense_only=dense_only),
+    }
+
+
+def init_transformer(key, cfg: TransformerConfig) -> dict:
+    k_emb, k_layers, k_head, k_dense = jax.random.split(key, 4)
+    n_scanned = cfg.n_layers - cfg.first_k_dense
+    layer_keys = jax.random.split(k_layers, n_scanned)
+    stacked = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.padded_vocab, cfg.dtype),
+    }
+    if cfg.first_k_dense:
+        dk = jax.random.split(k_dense, cfg.first_k_dense)
+        params["dense_layers"] = [
+            _init_block(dk[i], cfg, dense_only=True)
+            for i in range(cfg.first_k_dense)
+        ]
+    return params
+
+
+def param_specs(cfg: TransformerConfig) -> dict:
+    """PartitionSpecs for every param (model/tensor parallel [+ FSDP]).
+
+    FSDP shards over BOTH batch axes (pod, data) — forgetting `pod` would
+    silently replicate params across pods and cap ZeRO scaling at one pod
+    (caught by the multi-pod dry-run memory table).
+    """
+    f = ("pod", "data") if cfg.fsdp else None
+    def attn_specs():
+        if cfg.attention == "mla":
+            s = {
+                "wq_a": P(f, None),
+                "q_norm": P(None),
+                "wq_b": P(f, "model"),
+                "wkv_a": P(f, None),
+                "kv_norm": P(None),
+                "wkv_b": P(f, "model"),
+                "wo": P("model", f),
+            }
+        else:
+            s = {
+                "wq": P(f, "model"),
+                "wk": P(f, "model"),
+                "wv": P(f, "model"),
+                "wo": P("model", f),
+            }
+            if cfg.qk_norm:
+                s["q_scale"] = P(None)
+                s["k_scale"] = P(None)
+        return s
+
+    def dense_ffn_specs():
+        return {
+            "w_gate": P(f, "model"),
+            "w_up": P(f, "model"),
+            "w_down": P("model", f),
+        }
+
+    def ffn_specs(dense_only=False):
+        if not cfg.moe or dense_only:
+            return dense_ffn_specs()
+        s: dict = {"moe": moe_param_specs(P)._replace(
+            router=P(f, None),
+            w_gate=P("model", f, None),
+            w_up=P("model", f, None),
+            w_down=P("model", f, None),
+        )}
+        if cfg.n_shared_experts:
+            s["shared"] = dense_ffn_specs()
+        if cfg.dense_residual:
+            s["dense"] = dense_ffn_specs()
+        return s
+
+    def block_specs(dense_only=False):
+        return {
+            "attn_norm": P(None),
+            "attn": attn_specs(),
+            "ffn_norm": P(None),
+            "ffn": ffn_specs(dense_only),
+        }
+
+    # scanned layers: prepend the stacking dim
+    stacked = jax.tree.map(
+        lambda s: P(None, *s), block_specs(), is_leaf=lambda x: isinstance(x, P)
+    )
+    specs = {
+        "embed": P(None, "model"),
+        "layers": stacked,
+        "final_norm": P(None),
+        "lm_head": P(None, "model"),
+    }
+    if cfg.first_k_dense:
+        specs["dense_layers"] = [
+            block_specs(dense_only=True) for _ in range(cfg.first_k_dense)
+        ]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _gqa_qkv(p, cfg: TransformerConfig, x, positions):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim
+    )
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim
+    )
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim
+    )
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"])
+        k = rms_norm(k, p["k_scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mla_qkv(p, cfg: TransformerConfig, x, positions):
+    """MLA projections (train/prefill path, explicit K/V)."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_pe = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank :]
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)  # 1 shared head
+    kv = jnp.einsum("bsr,rh->bsh", c_kv, p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (b, s, h, dr))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    return q, k, v, (c_kv, k_pe[:, :, 0, :])
+
+
+def _attention(p, cfg: TransformerConfig, x, positions):
+    b, s, _ = x.shape
+    if cfg.attention == "mla":
+        q, k, v, _ = _mla_qkv(p, cfg, x, positions)
+        hkv = cfg.n_heads
+    else:
+        q, k, v = _gqa_qkv(p, cfg, x, positions)
+        hkv = cfg.n_kv_heads
+    # (B, S, H, D) → (B, H, S, D), heads sharded over model
+    q = shard(jnp.swapaxes(q, 1, 2), ("pod", "data"), "model", None, None)
+    k = shard(jnp.swapaxes(k, 1, 2), ("pod", "data"), "model" if hkv == cfg.n_heads else None, None, None)
+    v = shard(jnp.swapaxes(v, 1, 2), ("pod", "data"), "model" if hkv == cfg.n_heads else None, None, None)
+    scale = 1.0 / (cfg.qk_head_dim ** 0.5)
+    o = chunked_attention(
+        q, k, v, causal=True, scale=scale,
+        q_chunk=min(cfg.q_chunk, s), kv_chunk=min(cfg.kv_chunk, s),
+        probs_dtype=jnp.bfloat16 if cfg.bf16_probs else None,
+    )
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, cfg.n_heads * cfg.v_dim)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
+
+
+def _ffn(p, cfg: TransformerConfig, x):
+    """FFN: dense, or MoE (+shared experts / +dense residual)."""
+    if "w_gate" in p:  # dense
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0)
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    from repro.distributed.sharding import active_mesh, data_axes
+
+    mesh = active_mesh()
+    if cfg.moe_impl == "ep" and mesh is not None and "model" in mesh.shape:
+        out = moe_ffn_ep(
+            p["moe"], flat, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, mesh=mesh,
+            data_axes=data_axes(),
+        )
+    else:
+        out = moe_ffn(
+            p["moe"], flat, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    y = out.y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + swiglu(x, p["shared"]["w_gate"], p["shared"]["w_up"], p["shared"]["w_down"])
+    if "dense" in p:
+        y = y + swiglu(x, p["dense"]["w_gate"], p["dense"]["w_up"], p["dense"]["w_down"])
+    return y, out.aux_loss
+
+
+def _block(p, cfg: TransformerConfig, x, positions):
+    h = x + _attention(p["attn"], cfg, rms_norm(x, p["attn_norm"]), positions)
+    f, aux = _ffn(p["ffn"], cfg, rms_norm(h, p["ffn_norm"]))
+    out = shard_batch(h + f, None, None)
+    return out, aux
+
+
+def _backbone(params, cfg: TransformerConfig, tokens):
+    """Embed + all blocks + final norm → hidden states (B, S, d)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_batch(x, None, None)
+
+    aux_total = jnp.float32(0)
+    for p_dense in params.get("dense_layers", []):
+        blk = jax.checkpoint(_block, static_argnums=(1,)) if cfg.remat else _block
+        x, aux = blk(p_dense, cfg, x, positions)
+        aux_total += aux
+
+    def body(carry, layer_params):
+        x, aux_total = carry
+        blk = jax.checkpoint(_block, static_argnums=(1,)) if cfg.remat else _block
+        x, aux = blk(layer_params, cfg, x, positions)
+        return (x, aux_total + aux), None
+
+    (x, aux_total), _ = lax.scan(body, (x, aux_total), params["layers"])
+    return rms_norm(x, params["final_norm"]), aux_total
+
+
+def transformer_logits(params, cfg: TransformerConfig, tokens) -> jax.Array:
+    """Full logits (small configs / tests only — O(B·S·V) memory)."""
+    x, _ = _backbone(params, cfg, tokens)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def transformer_loss(params, cfg: TransformerConfig, batch) -> tuple[jax.Array, dict]:
+    """Next-token CE, computed in sequence chunks so the (tokens × vocab)
+    logits tile never exceeds ``loss_chunk × V / mesh`` per device."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x, aux = _backbone(params, cfg, tokens)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1
+        )
+    mask = batch.get(
+        "loss_mask",
+        jnp.concatenate(
+            [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+            axis=1,
+        ),
+    )
+
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nchunks = s // chunk
+
+    def chunk_loss(carry, i):
+        tot, cnt = carry
+        xs = lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        ls = lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        ms = lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xs, params["lm_head"],
+            preferred_element_type=jnp.float32,
+        )
+        logits = shard_batch(logits, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        return (tot + jnp.sum(nll), cnt + jnp.sum(ms)), None
+
+    (tot, cnt), _ = lax.scan(
+        chunk_loss, (jnp.float32(0), jnp.float32(0)), jnp.arange(nchunks)
+    )
+    loss = tot / jnp.maximum(cnt, 1.0)
+    total = loss + cfg.aux_loss_weight * aux
+    return total, {"ce_loss": loss, "aux_loss": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    """Allocate an empty KV cache (stacked over scanned layers).
+
+    GQA: k/v ``(L, B, Hkv, S, D)``. MLA: latent ``c_kv (L, B, S, r)`` +
+    ``k_pe (L, B, S, dr)`` — the MLA serving memory win (r+dr ≪ 2·H·D).
+    """
+    n_scanned = cfg.n_layers - cfg.first_k_dense
+    n_dense = cfg.first_k_dense
+    def zeros(*shape):
+        return jnp.zeros(shape, cfg.dtype)
+    if cfg.attention == "mla":
+        cache = {
+            "c_kv": zeros(n_scanned, batch, max_len, cfg.kv_lora_rank),
+            "k_pe": zeros(n_scanned, batch, max_len, cfg.qk_rope_dim),
+        }
+        if n_dense:
+            cache["dense_c_kv"] = zeros(n_dense, batch, max_len, cfg.kv_lora_rank)
+            cache["dense_k_pe"] = zeros(n_dense, batch, max_len, cfg.qk_rope_dim)
+    else:
+        cache = {
+            "k": zeros(n_scanned, batch, cfg.n_kv_heads, max_len, cfg.head_dim),
+            "v": zeros(n_scanned, batch, cfg.n_kv_heads, max_len, cfg.head_dim),
+        }
+        if n_dense:
+            cache["dense_k"] = zeros(n_dense, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            cache["dense_v"] = zeros(n_dense, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    cache["length"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def cache_specs(cfg: TransformerConfig, *, seq_axes=("model",), batch_axes=("pod", "data")) -> dict:
+    """Cache PartitionSpecs: batch over data axes, sequence over seq_axes —
+    sequence-parallel decode attention (GSPMD inserts the softmax
+    all-reduces; see module docstring)."""
+    n_dense = cfg.first_k_dense
+    if cfg.attention == "mla":
+        specs = {
+            "c_kv": P(None, batch_axes, seq_axes, None),
+            "k_pe": P(None, batch_axes, seq_axes, None),
+        }
+        if n_dense:
+            specs["dense_c_kv"] = specs["c_kv"]
+            specs["dense_k_pe"] = specs["k_pe"]
+    else:
+        specs = {
+            "k": P(None, batch_axes, None, seq_axes, None),
+            "v": P(None, batch_axes, None, seq_axes, None),
+        }
+        if n_dense:
+            specs["dense_k"] = specs["k"]
+            specs["dense_v"] = specs["v"]
+    specs["length"] = P(batch_axes)
+    return specs
+
+
+def _gqa_decode_attn(p, cfg, x, k_cache, v_cache, lengths):
+    """One-token GQA attention against the cache (+ current token)."""
+    b = x.shape[0]
+    pos = lengths  # (B,) new token position
+    q = jnp.einsum("bd,dh->bh", x, p["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k_new = jnp.einsum("bd,dh->bh", x, p["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v_new = jnp.einsum("bd,dh->bh", x, p["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"])
+        k_new = rms_norm(k_new, p["k_scale"])
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)[:, 0]            # (B, H, D)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)[:, 0]    # (B, Hkv, D)
+    v_new = v_new[:, 0]
+
+    # Insert the new K/V at each sequence's position (scatter over seq dim).
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, :, pos, :].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, :, pos, :].set(v_new.astype(v_cache.dtype))
+
+    o = decode_attention_xla(
+        q, k_cache, v_cache, lengths + 1,
+        scale=1.0 / (cfg.head_dim ** 0.5),
+    )
+    o = o.reshape(b, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return jnp.einsum("bh,hd->bd", o, p["wo"]), k_cache, v_cache
+
+
+def _mla_decode_attn(p, cfg, x, c_cache, pe_cache, lengths):
+    """Absorbed MLA decode: attention entirely in latent space.
+
+    Scores ``s[b,h,l] = (q_nope·W_kᵀ)·c_kv[l] + q_pe·k_pe[l]``; output
+    ``o[b,h] = (Σ_l p_l·c_kv[l])·W_v`` — K/V are never materialized.
+    """
+    b = x.shape[0]
+    h, dn, dr, dv, r = (
+        cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    pos = lengths
+    posb = pos[:, None]
+
+    cq = rms_norm(jnp.einsum("bd,dr->br", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("br,rh->bh", cq, p["wq_b"]).reshape(b, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe[:, None], posb, cfg.rope_theta)[:, 0]
+
+    kv_a = jnp.einsum("bd,dr->br", x, p["wkv_a"])
+    c_new = rms_norm(kv_a[..., :r], p["kv_norm"])
+    pe_new = apply_rope(
+        kv_a[..., r:][:, None, None, :], posb, cfg.rope_theta
+    )[:, 0, 0]
+
+    bidx = jnp.arange(b)
+    c_cache = c_cache.at[bidx, pos, :].set(c_new.astype(c_cache.dtype))
+    pe_cache = pe_cache.at[bidx, pos, :].set(pe_new.astype(pe_cache.dtype))
+
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    w_k = wkv_b[..., :dn]                                 # (r, h, dn)
+    w_v = wkv_b[..., dn:]                                 # (r, h, dv)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
+    scale = 1.0 / (cfg.qk_head_dim ** 0.5)
+    s = (
+        jnp.einsum("bhr,blr->bhl", q_lat, c_cache.astype(jnp.float32))
+        + jnp.einsum("bhr,blr->bhl", q_pe.astype(jnp.float32), pe_cache.astype(jnp.float32))
+    ) * scale
+    L = c_cache.shape[1]
+    valid = jnp.arange(L)[None, None, :] < (lengths + 1)[:, None, None]
+    s = jnp.where(valid, s, -0.5e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    pr = jnp.where(valid, jnp.exp(s - m), 0.0)
+    pr = pr / jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-30)
+    o_lat = jnp.einsum("bhl,blr->bhr", pr, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_v.astype(jnp.float32))
+    o = o.reshape(b, h * dv).astype(x.dtype)
+    return jnp.einsum("bh,hd->bd", o, p["wo"]), c_cache, pe_cache
+
+
+def _decode_block(p, cfg, x, cache_slice, lengths):
+    xn = rms_norm(x, p["attn_norm"])
+    if cfg.attention == "mla":
+        attn_out, c, pe = _mla_decode_attn(
+            p["attn"], cfg, xn, cache_slice["c_kv"], cache_slice["k_pe"], lengths
+        )
+        new_slice = {"c_kv": c, "k_pe": pe}
+    else:
+        attn_out, kc, vc = _gqa_decode_attn(
+            p["attn"], cfg, xn, cache_slice["k"], cache_slice["v"], lengths
+        )
+        new_slice = {"k": kc, "v": vc}
+    h = x + attn_out
+    hn = rms_norm(h, p["ffn_norm"])
+    f, _ = _ffn(p["ffn"], cfg, hn[:, None, :])
+    return h + f[:, 0, :], new_slice
+
+
+def decode_step(params, cfg: TransformerConfig, cache: dict, tokens: jax.Array):
+    """One decode step: ``tokens (B,)`` → next-token logits ``(B, V)``.
+
+    The per-sequence cache length lives in ``cache["length"]``.
+    """
+    lengths = cache["length"]
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, d)
+
+    new_cache = dict(cache)
+    for i, p_dense in enumerate(params.get("dense_layers", [])):
+        if cfg.attention == "mla":
+            sl = {"c_kv": cache["dense_c_kv"][i], "k_pe": cache["dense_k_pe"][i]}
+        else:
+            sl = {"k": cache["dense_k"][i], "v": cache["dense_v"][i]}
+        x, ns = _decode_block(p_dense, cfg, x, sl, lengths)
+        if cfg.attention == "mla":
+            new_cache["dense_c_kv"] = new_cache["dense_c_kv"].at[i].set(ns["c_kv"])
+            new_cache["dense_k_pe"] = new_cache["dense_k_pe"].at[i].set(ns["k_pe"])
+        else:
+            new_cache["dense_k"] = new_cache["dense_k"].at[i].set(ns["k"])
+            new_cache["dense_v"] = new_cache["dense_v"].at[i].set(ns["v"])
+
+    if cfg.attention == "mla":
+        scan_cache = {"c_kv": cache["c_kv"], "k_pe": cache["k_pe"]}
+    else:
+        scan_cache = {"k": cache["k"], "v": cache["v"]}
+
+    def body(x, layer):
+        layer_params, cache_slice = layer
+        x, new_slice = _decode_block(layer_params, cfg, x, cache_slice, lengths)
+        return x, new_slice
+
+    x, new_slices = lax.scan(body, x, (params["layers"], scan_cache))
+    new_cache.update(new_slices)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bd,dv->bv", x, params["lm_head"], preferred_element_type=jnp.float32
+    )
+    new_cache["length"] = lengths + 1
+    return logits, new_cache
+
+
+def prefill(params, cfg: TransformerConfig, tokens: jax.Array):
+    """Prefill: run the backbone over a prompt, return last-position logits.
+
+    (The cache-filling variant is a straightforward extension; the dry-run
+    exercises the compute-dominant backbone pass, which is what the roofline
+    needs. Serving beyond the dry-run uses decode_step's incremental cache.)
+    """
+    x, _ = _backbone(params, cfg, tokens)
+    last = x[:, -1, :]
+    return jnp.einsum(
+        "bd,dv->bv", last, params["lm_head"], preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: TransformerConfig) -> int:
+    import math
+
+    shapes = jax.eval_shape(
+        lambda k: init_transformer(k, cfg), jax.random.key(0)
+    )
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg: TransformerConfig) -> int:
+    """Active params per token (MoE: top_k + shared of the routed pool)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    n_scanned = cfg.n_layers - cfg.first_k_dense
+    routed_all = n_scanned * cfg.n_experts * per_expert
+    routed_active = n_scanned * cfg.top_k * per_expert
+    return total - routed_all + routed_active

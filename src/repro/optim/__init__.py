@@ -1,0 +1,14 @@
+from repro.optim.optimizer import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    linear_warmup,
+    clip_by_global_norm,
+)
+from repro.optim.compression import (  # noqa: F401
+    CompressionState,
+    compression_init,
+    compressed_psum_mean,
+    compress_tree,
+)

@@ -1,0 +1,115 @@
+"""Top-k gradient compression with error feedback.
+
+The paper's local-pruning insight — threshold partial scores locally, then
+communicate only the survivors — applied to data-parallel gradient
+synchronization: each device keeps its top-k gradient coordinates (by
+magnitude, after adding the error-feedback residual), all-gathers the
+compacted ``(index, value)`` pairs (volume ``2·k·p`` instead of the dense
+``n``), and scatter-adds them into the synchronized gradient. The dropped
+mass is carried to the next step (error feedback), which preserves
+convergence (Stich et al., arXiv:1809.07599; Lin et al. DGC,
+arXiv:1712.01887).
+
+Used by the ``grad_compression`` train-step variant through ``shard_map``
+over the data axis; collective volume shows up directly in the roofline's
+collective term (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class CompressionState(NamedTuple):
+    error: Any  # pytree like grads (f32): un-transmitted residual per device
+
+
+def compression_init(grads_like) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+        )
+    )
+
+
+def _topk_sparsify(flat: jax.Array, k: int):
+    """Keep the k largest-|.| entries of a flat vector; return (vals, idx)."""
+    mag = jnp.abs(flat)
+    vals, idx = lax.top_k(mag, k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def compressed_psum_mean(
+    g: jax.Array,
+    error: jax.Array,
+    axis_name: str,
+    *,
+    ratio: float = 0.01,
+    min_size: int = 4096,
+):
+    """Mean-reduce one gradient leaf over `axis_name` with top-k compression.
+
+    Must run inside ``shard_map``. Leaves smaller than ``min_size`` use a
+    dense psum (compression bookkeeping would cost more than it saves).
+    Returns ``(g_synced_mean, new_error)``.
+    """
+    p = lax.psum(1, axis_name)
+    n = g.size
+    if n < min_size:
+        return lax.pmean(g.astype(jnp.float32), axis_name), jnp.zeros_like(error)
+
+    k = max(1, int(n * ratio))
+    acc = g.astype(jnp.float32).reshape(-1) + error.reshape(-1)
+    vals, idx = _topk_sparsify(acc, k)
+    # Residual: what this device did NOT transmit (error feedback).
+    transmitted = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+    new_error = (acc - transmitted).reshape(error.shape)
+    # Exchange compacted coordinates: 2·k·p words vs n dense.
+    all_vals = lax.all_gather(vals, axis_name, axis=0, tiled=True)   # (p*k,)
+    all_idx = lax.all_gather(idx, axis_name, axis=0, tiled=True)    # (p*k,)
+    dense = jnp.zeros((n,), jnp.float32).at[all_idx].add(all_vals)
+    return (dense / p).reshape(g.shape), new_error
+
+
+def compress_tree(
+    grads,
+    state: CompressionState,
+    axis_name: str,
+    *,
+    ratio: float = 0.01,
+    min_size: int = 4096,
+):
+    """Apply :func:`compressed_psum_mean` leaf-wise; returns (synced, state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    synced, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        s, ne = compressed_psum_mean(
+            g, e, axis_name, ratio=ratio, min_size=min_size
+        )
+        synced.append(s.astype(g.dtype))
+        errs.append(ne)
+    return treedef.unflatten(synced), CompressionState(
+        error=treedef.unflatten(errs)
+    )
+
+
+def compression_comm_bytes(grads, *, ratio: float = 0.01, min_size: int = 4096, p: int = 2) -> dict:
+    """Napkin accounting: dense vs compressed collective volume (bytes)."""
+    dense = 0
+    compressed = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        if n < min_size:
+            dense += 4 * n
+            compressed += 4 * n
+        else:
+            k = max(1, int(n * ratio))
+            dense += 4 * n
+            compressed += 8 * k * p  # idx + val, gathered from p ranks
+    return {"dense_bytes": dense, "compressed_bytes": compressed,
+            "ratio": compressed / max(dense, 1)}

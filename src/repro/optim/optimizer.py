@@ -1,0 +1,102 @@
+"""AdamW (+ schedules, global-norm clipping, grad accumulation) as pure
+functions over param pytrees.
+
+Optimizer moments are f32 regardless of param dtype (bf16-safe). With
+``cfg.fsdp`` the moments inherit the FSDP'd param specs, i.e. ZeRO-style
+optimizer-state sharding falls out of the same PartitionSpec tree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    # m and v must be DISTINCT buffers (donation would otherwise see the
+    # same buffer twice).
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics["lr"] = jnp.asarray(lr, jnp.float32)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def linear_warmup(step, base_lr: float, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return base_lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(
+    step, base_lr: float, warmup_steps: int, total_steps: int,
+    final_frac: float = 0.1,
+):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, base_lr, warmup_steps)
+    prog = jnp.clip(
+        (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup_steps, warm, base_lr * cos)

@@ -1,0 +1,57 @@
+"""Test env: force 8 virtual CPU devices so the distributed (shard_map)
+tests can exercise real multi-device lowering in-process.
+
+NOTE: this is 8, NOT the dry-run's 512 — the production-mesh compile path is
+exercised only via ``launch/dryrun.py`` in its own process (see DESIGN.md).
+Single-device tests simply use device 0 and are unaffected.
+This must run before jax/jaxlib first parse XLA_FLAGS, hence conftest.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    """A small power-law-ish normalized corpus (paper-style data)."""
+    import jax.numpy as jnp
+
+    from repro.core.apss import normalize_rows
+
+    rng = np.random.default_rng(0)
+    n, m = 128, 96
+    D = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    D *= rng.random((n, m)) < 0.3
+    return np.asarray(normalize_rows(jnp.asarray(D)))
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    import jax
+
+    return jax.make_mesh(
+        (8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+@pytest.fixture(scope="session")
+def mesh8_model():
+    import jax
+
+    return jax.make_mesh(
+        (8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+@pytest.fixture(scope="session")
+def mesh4x2():
+    import jax
+
+    return jax.make_mesh(
+        (4, 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

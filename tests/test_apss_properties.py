@@ -1,0 +1,156 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The load-bearing guarantees of the paper's method:
+  1. Lemma 1 (local pruning soundness): for ANY dimension partition, a
+     global match has a partial score ≥ t/p on at least one shard.
+  2. Block bounds are true upper bounds → pruning never loses a match.
+  3. Threshold monotonicity: raising t can only shrink the match set.
+  4. Permutation equivariance of the match structure.
+  5. Symmetry: i matches j ⇔ j matches i (counts are symmetric).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apss import apss_reference, normalize_rows
+from repro.core.graph import match_set
+from repro.core.matches import dedupe_candidates
+from repro.core.pruning import (
+    block_maxweight_bounds,
+    block_prune_mask,
+    block_upper_bounds,
+    local_threshold,
+)
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def _corpus(seed: int, n: int, m: int, density: float) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    D = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    D *= rng.random((n, m)) < density
+    D[0, 0] = 1.0  # guarantee at least one nonzero row
+    return np.asarray(normalize_rows(jnp.asarray(D)))
+
+
+@SET
+@given(
+    seed=st.integers(0, 10_000),
+    p=st.sampled_from([2, 3, 4, 8]),
+    t=st.floats(0.05, 0.9),
+)
+def test_lemma1_local_pruning_soundness(seed, p, t):
+    """For a random partition of dims into p shards, every global match has
+    local partial ≥ t/p somewhere (the paper's Lemma 1)."""
+    D = _corpus(seed, 24, 32, 0.4)
+    rng = np.random.default_rng(seed + 1)
+    assignment = rng.integers(0, p, size=D.shape[1])
+    S = D @ D.T
+    t_loc = float(local_threshold(t, p))
+    partials = np.stack(
+        [D[:, assignment == shard] @ D[:, assignment == shard].T
+         if (assignment == shard).any()
+         else np.zeros_like(S)
+         for shard in range(p)]
+    )
+    ii, jj = np.where((S >= t) & ~np.eye(len(D), dtype=bool))
+    for i, j in zip(ii, jj):
+        assert partials[:, i, j].max() >= t_loc - 1e-6
+
+
+@SET
+@given(seed=st.integers(0, 10_000), t=st.floats(0.1, 0.95))
+def test_block_bounds_sound(seed, t):
+    D = _corpus(seed, 32, 24, 0.5)
+    b = 8
+    ub = np.asarray(
+        block_upper_bounds(
+            block_maxweight_bounds(jnp.asarray(D), b),
+            block_maxweight_bounds(jnp.asarray(D), b),
+        )
+    )
+    mask = np.asarray(block_prune_mask(jnp.asarray(D), jnp.asarray(D), t, b))
+    S = D @ D.T
+    nb = len(D) // b
+    for i in range(nb):
+        for j in range(nb):
+            blk = S[i * b:(i + 1) * b, j * b:(j + 1) * b]
+            assert ub[i, j] >= blk.max() - 1e-5
+            if not mask[i, j]:
+                # pruned ⇒ provably no match in the tile
+                off_diag = blk.copy()
+                if i == j:
+                    np.fill_diagonal(off_diag, 0.0)
+                assert off_diag.max() < t
+
+
+@SET
+@given(
+    seed=st.integers(0, 10_000),
+    t1=st.floats(0.1, 0.5),
+    dt=st.floats(0.01, 0.4),
+)
+def test_threshold_monotonicity(seed, t1, dt):
+    D = _corpus(seed, 40, 24, 0.4)
+    lo = apss_reference(jnp.asarray(D), t1, 64)
+    hi = apss_reference(jnp.asarray(D), t1 + dt, 64)
+    assert match_set(hi) <= match_set(lo)
+    assert (np.asarray(hi.counts) <= np.asarray(lo.counts)).all()
+
+
+@SET
+@given(seed=st.integers(0, 10_000))
+def test_permutation_equivariance(seed):
+    D = _corpus(seed, 30, 20, 0.5)
+    t = 0.3
+    perm = np.random.default_rng(seed + 7).permutation(len(D))
+    base = apss_reference(jnp.asarray(D), t, 64)
+    permd = apss_reference(jnp.asarray(D[perm]), t, 64)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    remapped = {
+        (min(inv[i], inv[j]), max(inv[i], inv[j]))
+        for i, j in (
+            (perm[a], perm[b]) for a, b in match_set(permd)
+        )
+    }
+    # match_set of permuted data, mapped back, equals the original set
+    got = {(min(perm[a], perm[b]), max(perm[a], perm[b])) for a, b in match_set(permd)}
+    want = match_set(base)
+    assert got == want
+
+
+@SET
+@given(seed=st.integers(0, 10_000), t=st.floats(0.1, 0.8))
+def test_symmetry(seed, t):
+    D = _corpus(seed, 40, 24, 0.4)
+    ref = apss_reference(jnp.asarray(D), t, 64)
+    idx = np.asarray(ref.indices)
+    for i in range(idx.shape[0]):
+        for j in idx[i]:
+            if j >= 0:
+                assert i in idx[j], (i, j)
+
+
+@SET
+@given(
+    seed=st.integers(0, 10_000),
+    c=st.integers(2, 12),
+)
+def test_dedupe_idempotent_and_sum_preserving(seed, c):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(-1, 6, size=(4, c)).astype(np.int32)
+    vals = rng.random((4, c)).astype(np.float32)
+    # equal-index entries must carry equal values (the vertical-compressed
+    # contract: duplicates hold identical accumulated scores)
+    for r in range(4):
+        for u in np.unique(idx[r]):
+            if u >= 0:
+                vals[r, idx[r] == u] = vals[r, idx[r] == u][0]
+    v1, i1 = dedupe_candidates(jnp.asarray(vals), jnp.asarray(idx))
+    # per row: surviving index set == unique non-negative input indices
+    for r in range(4):
+        want = set(int(u) for u in np.unique(idx[r]) if u >= 0)
+        got = set(int(u) for u in np.asarray(i1[r]) if u >= 0)
+        assert got == want

@@ -1,0 +1,39 @@
+"""Every (arch × shape) cell must BUILD (abstract shapes + shardings) on a
+mesh — catches config/spec regressions in seconds without the 512-device
+compile (which lives in launch/dryrun.py)."""
+
+import jax
+import pytest
+
+from repro.configs import ASSIGNED, get_arch
+from repro.distributed.sharding import use_mesh
+
+
+@pytest.fixture(scope="module")
+def small_mesh():
+    # axis names match production; sizes divide all assigned shapes
+    return jax.make_mesh(
+        (2, 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+ALL_CELLS = [
+    (a, s) for a in ASSIGNED + ["apss"] for s in get_arch(a).shapes
+]
+
+
+@pytest.mark.parametrize("arch_name,shape_name", ALL_CELLS)
+def test_cell_builds(arch_name, shape_name, small_mesh):
+    arch = get_arch(arch_name)
+    cell = arch.cell(shape_name)
+    cfg = arch.make_config()
+    with use_mesh(small_mesh):
+        build = cell.build(cfg, small_mesh)
+    # args are abstract (no allocation), shardings present, fn callable
+    assert callable(build.fn)
+    leaves = jax.tree.leaves(build.args)
+    assert leaves and all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+    sh = jax.tree.leaves(build.in_shardings)
+    assert sh and all(hasattr(s, "spec") for s in sh)
+    assert "model_flops" in build.static_info or build.static_info

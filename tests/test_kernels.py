@@ -1,0 +1,177 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apss import normalize_rows
+from repro.kernels.apss_block.ops import apss_block_matmul
+from repro.kernels.apss_block.ref import apss_block_reference
+from repro.kernels.decode_attention.ops import (
+    combine_partials,
+    decode_attention,
+    decode_attention_partials,
+)
+from repro.kernels.decode_attention.ref import (
+    combine_partials_reference,
+    decode_attention_reference,
+)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+
+RNG = np.random.default_rng(42)
+
+
+def _corp(n, m, dtype):
+    D = np.abs(RNG.standard_normal((n, m))).astype(np.float32)
+    D *= RNG.random((n, m)) < 0.25
+    D = np.asarray(normalize_rows(jnp.asarray(D)))
+    return jnp.asarray(D, dtype)
+
+
+# -- apss_block ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n1,n2,m,bm,bn,bk",
+    [
+        (256, 256, 512, 128, 128, 256),
+        (256, 128, 512, 128, 128, 512),
+        (300, 200, 700, 128, 128, 256),   # ragged → padding
+        (512, 512, 1024, 256, 256, 512),  # production tile
+        (128, 128, 128, 128, 128, 128),
+    ],
+)
+@pytest.mark.parametrize("t", [0.2, 0.5])
+def test_apss_block_shapes(n1, n2, m, bm, bn, bk, t):
+    X, Y = _corp(n1, m, jnp.float32), _corp(n2, m, jnp.float32)
+    got = apss_block_matmul(X, Y, t, block_m=bm, block_n=bn, block_k=bk)
+    want = apss_block_reference(X, Y, t)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_apss_block_dtypes(dtype):
+    X = _corp(256, 512, dtype)
+    got = apss_block_matmul(X, X, 0.3, block_m=128, block_n=128, block_k=256)
+    want = apss_block_reference(X.astype(jnp.float32), X.astype(jnp.float32), 0.3)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    # bf16 inputs can flip borderline threshold decisions; compare the
+    # confidently-matched region only.
+    gotf = np.asarray(got, np.float32)
+    wantf = np.asarray(want)
+    confident = np.abs(wantf - 0.3) > 0.02
+    np.testing.assert_allclose(gotf[confident], wantf[confident], atol=atol)
+
+
+def test_apss_block_mask_skips_blocks():
+    """An explicitly dead mask zeroes the tile even if scores pass t."""
+    X = _corp(256, 256, jnp.float32)
+    mask = jnp.zeros((2, 2), jnp.int32).at[0, 0].set(1)
+    got = apss_block_matmul(
+        X, X, 0.0, block_mask=mask, block_m=128, block_n=128, block_k=256
+    )
+    g = np.asarray(got)
+    assert (g[128:, :] == 0).all() and (g[:, 128:] == 0).all()
+    want = apss_block_reference(X, X, 0.0, block_mask=mask, block_m=128, block_n=128)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_apss_block_auto_mask_exact(corpus):
+    """Auto bound mask must not change results (bounds are sound)."""
+    X = jnp.asarray(np.repeat(corpus, 2, axis=0)[:256, :96])
+    Xp = jnp.pad(X, ((0, 0), (0, 160)))
+    a = apss_block_matmul(Xp, Xp, 0.4, auto_mask=True, block_m=128, block_n=128, block_k=128)
+    b = apss_block_matmul(Xp, Xp, 0.4, auto_mask=False, block_m=128, block_n=128, block_k=128)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+# -- flash_attention ----------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D",
+    [
+        (2, 4, 2, 256, 64),
+        (1, 8, 8, 256, 128),   # MHA
+        (2, 16, 4, 128, 64),   # GQA 4:1
+        (1, 4, 1, 512, 64),    # MQA
+        (1, 2, 2, 300, 32),    # ragged seq → causal padding
+    ],
+)
+def test_flash_attention_shapes(B, Hq, Hkv, S, D):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, block_q=128, block_k=128)
+    want = attention_reference(q, k, v)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    q = jnp.asarray(RNG.standard_normal((1, 4, 128, 64)), dtype)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), dtype)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), dtype)
+    got = flash_attention(q, k, v, block_q=128, block_k=128)
+    want = attention_reference(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), atol=atol
+    )
+
+
+def test_flash_attention_noncausal():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 256, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 256, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 256, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=128, block_k=128)
+    want = attention_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+# -- decode_attention -----------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,L,D",
+    [(2, 4, 2, 512, 64), (3, 8, 8, 1000, 128), (1, 8, 1, 256, 64)],
+)
+def test_decode_attention_shapes(B, Hq, Hkv, L, D):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, L, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, L, D)), jnp.float32)
+    lens = jnp.asarray(RNG.integers(1, L + 1, size=(B,)), jnp.int32)
+    got = decode_attention(q, k, v, lens, block_k=256)
+    want = decode_attention_reference(q, k, v, lens)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_decode_sharded_combine_exact(P):
+    """Sequence-sharded partials combine to the monolithic answer — the
+    long_500k decode path's correctness core."""
+    B, Hq, Hkv, L, D = 2, 8, 4, 1024, 64
+    q = jnp.asarray(RNG.standard_normal((B, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, L, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, L, D)), jnp.float32)
+    lens = np.asarray([L, L // 3], np.int32)
+    accs, ms, ls = [], [], []
+    shard = L // P
+    for s in range(P):
+        loc_len = np.clip(lens - s * shard, 0, shard).astype(np.int32)
+        a, m, l = decode_attention_partials(
+            q, k[:, :, s * shard:(s + 1) * shard],
+            v[:, :, s * shard:(s + 1) * shard],
+            jnp.asarray(loc_len), block_k=128,
+        )
+        accs.append(a), ms.append(m), ls.append(l)
+    got = combine_partials(jnp.stack(accs), jnp.stack(ms), jnp.stack(ls))
+    want = decode_attention_reference(q, k, v, jnp.asarray(lens))
+    np.testing.assert_allclose(got, want, atol=2e-5)
+    ref_comb = combine_partials_reference(
+        jnp.stack(accs), jnp.stack(ms), jnp.stack(ls)
+    )
+    np.testing.assert_allclose(got, ref_comb, atol=1e-6)

@@ -1,0 +1,116 @@
+"""§Perf feature tests: EP MoE dispatch, grad accumulation, bf16 wire
+format, hlo_analysis loop awareness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch.train import make_lm_train_step
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_ep
+from repro.models.transformer import init_transformer
+from repro.optim import adamw_init
+
+
+@pytest.fixture(scope="module")
+def mesh2x4():
+    return jax.make_mesh(
+        (2, 4), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def test_ep_moe_matches_dense_dispatch(mesh2x4):
+    """Replicated-activation EP == scatter dispatch when nothing drops."""
+    params = init_moe(jax.random.key(0), 32, 16, 8, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (64, 32), jnp.float32)
+    base = jax.jit(
+        lambda p, x: moe_ffn(p, x, top_k=2, capacity_factor=16.0)
+    )(params, x)
+    ep = jax.jit(
+        lambda p, x: moe_ffn_ep(
+            p, x, top_k=2, capacity_factor=16.0, mesh=mesh2x4,
+            data_axes=("data",),
+        )
+    )(params, x)
+    np.testing.assert_allclose(base.y, ep.y, atol=1e-5)
+    assert float(ep.dropped_frac) == 0.0
+
+
+def test_ep_moe_gradients_flow(mesh2x4):
+    params = init_moe(jax.random.key(0), 32, 16, 8, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (64, 32), jnp.float32)
+    g = jax.grad(
+        lambda p: jnp.sum(
+            moe_ffn_ep(
+                p, x, top_k=2, capacity_factor=16.0, mesh=mesh2x4,
+                data_axes=("data",),
+            ).y ** 2
+        )
+    )(params)
+    assert all(bool(jnp.any(x != 0)) for x in jax.tree.leaves(g))
+
+
+def test_grad_accum_matches_single_step():
+    cfg1 = get_arch("qwen3-1.7b").make_smoke_config()
+    cfg4 = dataclasses.replace(cfg1, grad_accum=4)
+    params = init_transformer(jax.random.key(0), cfg1)
+    opt = adamw_init(params)
+    tokens = jax.random.randint(jax.random.key(1), (8, 64), 0, cfg1.vocab_size)
+    p1, _, m1 = jax.jit(make_lm_train_step(cfg1))(params, opt, {"tokens": tokens})
+    p4, _, m4 = jax.jit(make_lm_train_step(cfg4))(params, opt, {"tokens": tokens})
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-5
+        )
+
+
+def test_bf16_wire_apss_exact(corpus, mesh4x2):
+    """bf16 blocks travel as u16; matches stay within bf16 tolerance of
+    the f32 oracle (bound: one bf16 rounding of the inputs)."""
+    from repro.core.apss import apss_reference
+    from repro.core.distributed import apss_2d
+    from repro.core.graph import match_set
+
+    D32 = jnp.asarray(corpus)
+    D16 = D32.astype(jnp.bfloat16)
+    # threshold far from any true similarity: rounding can't flip matches
+    ref = apss_reference(D32, 0.35, 16)
+    got = jax.jit(
+        lambda d: apss_2d(d, 0.35, 16, mesh4x2, accumulation="allreduce",
+                          block_rows=16)
+    )(D16)
+    a, b = match_set(got), match_set(ref)
+    # allow borderline flips only (|sim - t| < bf16 eps·scale)
+    diff = a ^ b
+    assert len(diff) <= max(2, len(b) // 50), (len(diff), len(b))
+
+
+def test_hlo_analysis_loop_multiplication():
+    from repro.launch.hlo_analysis import analyze
+
+    def loop(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    hlo = jax.jit(loop).lower(sds, sds).compile().as_text()
+    a = analyze(hlo)
+    assert a["flops"] == pytest.approx(7 * 2 * 128 ** 3, rel=0.01)
+    assert a["max_multiplier"] >= 7
+
+
+def test_dryrun_overrides_parse():
+    from repro.launch.dryrun import apply_overrides
+
+    cfg = get_arch("qwen3-1.7b").make_smoke_config()
+    out = apply_overrides(cfg, ["grad_accum=4", "bf16_probs=True"])
+    assert out.grad_accum == 4 and out.bf16_probs is True
+    d = apply_overrides({"a": 1}, ["a=2", "b=x"])
+    assert d == {"a": 2, "b": "x"}

@@ -1,0 +1,224 @@
+"""Substrate tests: optimizer, checkpoint/fault-tolerance, compression,
+elastic re-mesh, data determinism, dedup, straggler ledger."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.data import (
+    GraphPipeline,
+    LMDataPipeline,
+    RecsysPipeline,
+    corpus_stats,
+    dedup_corpus,
+    synthetic_corpus,
+)
+from repro.data.sampler import neighbor_sample, sampled_shape
+from repro.distributed import StepTimer
+from repro.distributed.elastic import make_elastic_mesh, reshard_tree
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    compress_tree,
+    compression_init,
+    cosine_schedule,
+)
+
+
+# -- optimizer ----------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(
+            g, opt, params, lr=0.1, weight_decay=0.0
+        )
+    assert float(loss(params)) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, 1.0, 10, 100)) < 0.2          # warmup
+    assert float(cosine_schedule(10, 1.0, 10, 100)) == pytest.approx(1.0)
+    assert float(cosine_schedule(100, 1.0, 10, 100)) == pytest.approx(0.1)
+
+
+def test_bf16_params_f32_moments():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt.m["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    p2, opt2, _ = adamw_update(g, opt, params, lr=1e-2)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+# -- checkpoint / fault tolerance ----------------------------------------------
+
+
+def test_checkpoint_roundtrip_all_dtypes():
+    state = {
+        "bf16": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+        "f32": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "i32": jnp.asarray([1, 2, 3], jnp.int32),
+        "nested": {"scalar": jnp.asarray(7, jnp.int32)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(state, d, 5)
+        back = load_checkpoint(d, 5, like=state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            assert str(a.dtype) == str(b.dtype)
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32)
+            )
+
+
+def test_checkpoint_manager_keep_k_and_resume():
+    state = {"x": jnp.ones((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save({"x": state["x"] * s}, s)
+        assert mgr.all_steps() == [3, 4]
+        restored, step = mgr.restore(like=state)
+        assert step == 4
+        np.testing.assert_allclose(restored["x"], 4.0)
+
+
+def test_checkpoint_atomicity_no_tmp_left():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save({"x": jnp.zeros(3)}, 1, blocking=False)
+        mgr.wait()
+        assert not any(p.endswith(".tmp") for p in os.listdir(d))
+        assert mgr.latest_step() == 1
+
+
+def test_train_loop_resume(tmp_path):
+    """Auto-resume: a second train_loop continues from the checkpoint."""
+    from repro.launch.train import train_loop
+
+    d = str(tmp_path / "ck")
+    train_loop(arch="gat-cora", steps=4, ckpt_dir=d, ckpt_every=2, log_every=100)
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() == 4
+    out = train_loop(arch="gat-cora", steps=6, ckpt_dir=d, ckpt_every=2, log_every=100)
+    assert np.isfinite(out["loss"])
+    assert mgr.latest_step() == 6
+
+
+# -- gradient compression -------------------------------------------------------
+
+
+def test_compression_error_feedback_invariant(mesh8):
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.standard_normal((8, 8192)), jnp.float32)}
+    state = compression_init({"w": grads["w"][0]})
+
+    def f(g, err):
+        synced, new = compress_tree(g, state._replace(error=err), "data", ratio=0.05)
+        recon = jax.tree.map(
+            lambda s, e: s + jax.lax.pmean(e, "data"), synced, new.error
+        )
+        return recon
+
+    recon = jax.jit(
+        jax.shard_map(
+            f, mesh=mesh8, in_specs=(P("data"), P()), out_specs=P(),
+            check_vma=False,
+        )
+    )(grads, state.error)
+    np.testing.assert_allclose(
+        np.asarray(recon["w"]).reshape(-1), grads["w"].mean(0), atol=1e-5
+    )
+
+
+def test_compression_volume_accounting():
+    from repro.optim.compression import compression_comm_bytes
+
+    g = {"big": jnp.zeros((1 << 20,)), "small": jnp.zeros((64,))}
+    acc = compression_comm_bytes(g, ratio=0.01, p=16)
+    assert acc["compressed_bytes"] < acc["dense_bytes"]
+
+
+# -- elastic ---------------------------------------------------------------------
+
+
+def test_elastic_reshard_to_smaller_mesh():
+    state = {"w": np.arange(32, dtype=np.float32).reshape(8, 4)}
+    specs = {"w": P("data", "model")}
+    big = make_elastic_mesh(8, model_parallel=2)
+    small = make_elastic_mesh(4, model_parallel=2)
+    on_big = reshard_tree(state, specs, big)
+    on_small = reshard_tree(state, specs, small)
+    np.testing.assert_array_equal(np.asarray(on_big["w"]), state["w"])
+    np.testing.assert_array_equal(np.asarray(on_small["w"]), state["w"])
+    assert len(on_small["w"].sharding.device_set) == 4
+
+
+def test_elastic_mesh_keeps_model_parallel():
+    m = make_elastic_mesh(7, model_parallel=2)
+    assert m.shape["model"] == 2 and m.shape["data"] == 3
+
+
+# -- data ------------------------------------------------------------------------
+
+
+def test_pipelines_deterministic_and_step_dependent():
+    lm = LMDataPipeline(vocab_size=1000, batch_size=4, seq_len=16, seed=3)
+    assert (lm.get_batch(7)["tokens"] == lm.get_batch(7)["tokens"]).all()
+    assert (lm.get_batch(7)["tokens"] != lm.get_batch(8)["tokens"]).any()
+    rs = RecsysPipeline(n_items=100, batch_size=4, kind="seq")
+    b = rs.get_batch(0)
+    assert b["item_ids"].shape == (4, 50)
+    assert (b["item_ids"][b["mask"]] == 100).all()  # [MASK] token rows
+
+
+def test_corpus_stats_match_construction():
+    D = synthetic_corpus(100, 400, 12.0, seed=1)
+    st = corpus_stats(D)
+    assert st.n == 100 and st.m == 400
+    assert 6 <= st.avg_vector_size <= 20
+    norms = np.linalg.norm(D, axis=1)
+    np.testing.assert_allclose(norms[norms > 0], 1.0, rtol=1e-5)
+
+
+def test_dedup_finds_planted_duplicates():
+    D = synthetic_corpus(64, 256, 10.0, seed=2)
+    dup = np.concatenate([D, D[:8]])
+    keep, dup_of = dedup_corpus(dup, threshold=0.999)
+    assert keep[:64].all()
+    assert not keep[64:].any()
+    np.testing.assert_array_equal(dup_of[64:], np.arange(8))
+
+
+def test_sampler_static_shapes():
+    pipe = GraphPipeline(n_nodes=300, n_edges=2400, d_feat=8)
+    indptr, idx = pipe.csr()
+    g = pipe.full_graph()
+    seeds = np.arange(16)
+    batch = neighbor_sample(indptr, idx, seeds, (4, 3), g["features"], g["labels"])
+    n, e = sampled_shape(16, (4, 3))
+    assert batch["features"].shape == (n, 8)
+    assert batch["edge_src"].shape == (e,)
+    assert batch["label_mask"][:16].all() and not batch["label_mask"][16:].any()
+
+
+# -- straggler --------------------------------------------------------------------
+
+
+def test_straggler_detection():
+    t = StepTimer(tolerance=1.5)
+    for r in range(8):
+        for _ in range(5):
+            t.record(r, 0.1 if r != 5 else 0.25)
+    rep = t.report()
+    assert rep.evict == [5]
