@@ -1,0 +1,111 @@
+"""Streaming fused extraction vs the seed dense-kernel path.
+
+Three variants of the kernel-backed self-join, on a topic-clustered Zipfian
+corpus (the block-pruning-friendly regime — see ``data.synthetic``):
+
+  dense-kernel     seed path: Pallas thresholded n×n score matrix in HBM,
+                   then XLA ``extract_matches`` over the dense result
+  fused            streaming kernel: matmul → threshold → top-k merge →
+                   count fused, O(n·k) output, pruned tiles masked with
+                   ``@pl.when`` (still burn a pipeline slot)
+  fused-compacted  fused + live-tile worklist via scalar prefetch: pruned
+                   tiles cost zero grid steps, upper-triangular tiles only
+                   (S = Sᵀ)
+
+``run`` emits the usual CSV lines at a CPU-friendly n; ``write_json`` runs
+the same comparison at production-proof scale (n ≥ 4096) and writes
+``BENCH_apss.json`` — the perf trajectory seed for the streaming path.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core.matches import extract_matches
+from repro.core.pruning import block_prune_mask, prune_stats
+from repro.kernels.apss_block.ops import (
+    apss_block_matmul,
+    apss_fused,
+    apss_fused_compacted,
+)
+
+K = 32
+BM = 256
+
+
+def _corpus(n: int, m: int = 768):
+    from repro.data.synthetic import clustered_corpus
+
+    return jnp.asarray(clustered_corpus(n, m, 8, n_clusters=32, seed=0))
+
+
+def _variants(threshold: float):
+    """name → jit-ready callable D → Matches (or dense scores for seed)."""
+    dense = jax.jit(
+        lambda d: extract_matches(
+            apss_block_matmul(
+                d, d, threshold, block_m=BM, block_n=BM, block_k=256
+            ),
+            threshold, K,
+        )
+    )
+    fused = jax.jit(
+        lambda d: apss_fused(
+            d, d, threshold, K, block_m=BM, block_n=BM, block_k=256
+        )
+    )
+
+    def compacted(d):
+        # Host-side worklist compaction: not jittable end-to-end, timed as
+        # called in production (mask + compaction on every call).
+        return apss_fused_compacted(d, threshold, K, block_m=BM, block_k=256)
+
+    return {"dense-kernel": dense, "fused": fused, "fused-compacted": compacted}
+
+
+def _measure(n: int, threshold: float, *, warmup: int, iters: int):
+    D = _corpus(n)
+    mask = block_prune_mask(D, D, threshold, BM, BM, use_minsize=False)
+    stats = prune_stats(mask)
+    out = {
+        "n": n,
+        "m": int(D.shape[1]),
+        "k": K,
+        "threshold": threshold,
+        "block": BM,
+        "live_tile_fraction": float(stats.live_fraction),
+        "live_tiles": int(stats.live_blocks),
+        "total_tiles": int(stats.total_blocks),
+        "variants": {},
+    }
+    counts = {}
+    for name, fn in _variants(threshold).items():
+        us = time_fn(fn, D, warmup=warmup, iters=iters)
+        res = fn(D)
+        counts[name] = int(res.counts.sum()) if hasattr(res, "counts") else None
+        out["variants"][name] = {"us_per_call": us}
+    # All variants must agree on the exact directed match count.
+    assert len({c for c in counts.values() if c is not None}) == 1, counts
+    out["total_matches"] = counts["fused"]
+    return out
+
+
+def run(lines: list) -> None:
+    r = _measure(1024, 0.4, warmup=1, iters=3)
+    for name, v in r["variants"].items():
+        lines.append(row(
+            f"apss_stream/{name}-n1024", v["us_per_call"],
+            f"live_tiles={r['live_tile_fraction']:.3f};matches={r['total_matches']}",
+        ))
+
+
+def write_json(path: str, n: int = 4096, threshold: float = 0.4) -> dict:
+    r = _measure(n, threshold, warmup=1, iters=2)
+    with open(path, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    return r

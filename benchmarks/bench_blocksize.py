@@ -28,13 +28,10 @@ def run(lines: list) -> None:
         return analyze(hlo)["collectives"]
 
     D = jnp.asarray(bench_corpus(512, 768))
-    mesh_v = jax.make_mesh(
-        (8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
-    mesh_2d = jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.compat import make_mesh
+
+    mesh_v = make_mesh((8,), ("model",))
+    mesh_2d = make_mesh((4, 2), ("data", "model"))
 
     for b in (16, 32, 64, 128, 256, 512):
         fn = functools.partial(

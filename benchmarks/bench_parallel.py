@@ -41,10 +41,11 @@ def run(lines: list) -> None:
     )
     lines.append(row("parallel/sequential", us0, f"flops_dev={fl0:.2e}"))
 
-    A = jax.sharding.AxisType.Auto
-    mesh_h = jax.make_mesh((8,), ("data",), axis_types=(A,))
-    mesh_v = jax.make_mesh((8,), ("model",), axis_types=(A,))
-    mesh_2d = jax.make_mesh((4, 2), ("data", "model"), axis_types=(A,) * 2)
+    from repro.compat import make_mesh
+
+    mesh_h = make_mesh((8,), ("data",))
+    mesh_v = make_mesh((8,), ("model",))
+    mesh_2d = make_mesh((4, 2), ("data", "model"))
 
     cases = {
         "horizontal-allgather": functools.partial(
@@ -64,6 +65,14 @@ def run(lines: list) -> None:
             apss_2d, threshold=T, k=K, mesh=mesh_2d,
             accumulation="compressed", block_rows=128,
             candidate_capacity=256),
+        # Fused-kernel scoring inside the ring schedules: the score tile
+        # never reaches HBM and each step's extraction is O(rows·k).
+        "horizontal-ring-fused": functools.partial(
+            apss_horizontal, threshold=T, k=K, mesh=mesh_h,
+            schedule="ring", block_rows=128, use_kernel=True),
+        "horizontal-halfring-fused": functools.partial(
+            apss_horizontal, threshold=T, k=K, mesh=mesh_h,
+            schedule="halfring", block_rows=128, use_kernel=True),
     }
     for name, fn in cases.items():
         us = time_fn(jax.jit(fn), D)

@@ -24,9 +24,9 @@ T, K = 0.4, 32
 
 
 def _mesh(p):
-    return jax.make_mesh(
-        (p,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.compat import make_mesh
+
+    return make_mesh((p,), ("model",))
 
 
 def _collective_bytes(fn, D):

@@ -58,3 +58,14 @@ def run(lines: list) -> None:
     mask = block_prune_mask(D, D, T, 256, 256)
     live = float(prune_stats(mask).live_fraction)
     lines.append(row("seq/kernel-pruned", us, f"live_tiles={live:.2f}"))
+
+    # Streaming fused extraction: Matches straight from the kernel, O(n·k)
+    # HBM (the dense variants above write the full thresholded n×n matrix).
+    kf = jax.jit(
+        functools.partial(
+            apss_blocked, threshold=T, k=K, block_rows=256, use_kernel=True
+        )
+    )
+    us = time_fn(kf, D)
+    assert int(kf(D).counts.sum()) == n_matches
+    lines.append(row("seq/kernel-fused", us, f"matches={n_matches}"))

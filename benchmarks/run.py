@@ -8,6 +8,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--only sequential,pruning,...]
+    PYTHONPATH=src python -m benchmarks.run --json [PATH] [--n 4096]
+
+``--json`` runs the streaming-extraction comparison (dense-kernel vs fused
+vs fused-compacted) at ``--n`` and writes the result to PATH (default
+``BENCH_apss.json``) — the perf-trajectory artifact for the fused APSS
+path.
 """
 
 import argparse  # noqa: E402
@@ -18,10 +24,17 @@ import traceback  # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: sequential,pruning,blocksize,parallel,roofline")
+                    help="comma list: sequential,pruning,blocksize,parallel,"
+                         "apss_stream,roofline")
+    ap.add_argument("--json", nargs="?", const="BENCH_apss.json", default=None,
+                    metavar="PATH",
+                    help="write the streaming APSS comparison to PATH and exit")
+    ap.add_argument("--n", type=int, default=4096,
+                    help="corpus rows for --json (default 4096)")
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_apss_stream,
         bench_blocksize,
         bench_parallel,
         bench_pruning,
@@ -29,12 +42,23 @@ def main() -> None:
         roofline,
     )
 
+    if args.json:
+        r = bench_apss_stream.write_json(args.json, n=args.n)
+        for name, v in r["variants"].items():
+            print(f"{name}: {v['us_per_call']:.0f} us")
+        print(
+            f"live tiles {r['live_tiles']}/{r['total_tiles']} "
+            f"({r['live_tile_fraction']:.3f}) -> {args.json}"
+        )
+        return
+
     suites = {
-        "sequential": bench_sequential.run,   # paper Tables 2-3
-        "pruning": bench_pruning.run,         # paper Tables 5-6
-        "blocksize": bench_blocksize.run,     # paper Tables 7-8 / Fig 8
-        "parallel": bench_parallel.run,       # paper Figs 3-6
-        "roofline": roofline.run,             # EXPERIMENTS.md §Roofline
+        "sequential": bench_sequential.run,    # paper Tables 2-3
+        "pruning": bench_pruning.run,          # paper Tables 5-6
+        "blocksize": bench_blocksize.run,      # paper Tables 7-8 / Fig 8
+        "parallel": bench_parallel.run,        # paper Figs 3-6
+        "apss_stream": bench_apss_stream.run,  # streaming fused extraction
+        "roofline": roofline.run,              # EXPERIMENTS.md §Roofline
     }
     selected = args.only.split(",") if args.only else list(suites)
 

@@ -39,10 +39,11 @@ def main() -> None:
     print(f"oracle: {int(ref.counts.sum())//2} unordered matches at t={t}")
 
     # 3. the paper's three distributions
-    A = jax.sharding.AxisType.Auto
-    mesh_h = jax.make_mesh((8,), ("data",), axis_types=(A,))
-    mesh_v = jax.make_mesh((8,), ("model",), axis_types=(A,))
-    mesh_2d = jax.make_mesh((4, 2), ("data", "model"), axis_types=(A,) * 2)
+    from repro.compat import make_mesh
+
+    mesh_h = make_mesh((8,), ("data",))
+    mesh_v = make_mesh((8,), ("model",))
+    mesh_2d = make_mesh((4, 2), ("data", "model"))
 
     variants = {
         "1-D horizontal (ring)": lambda d: apss_horizontal(

@@ -68,6 +68,7 @@ def similarity_topk(
     row_offset: jax.Array | int = 0,
     col_offset: jax.Array | int = 0,
     col_valid: Optional[jax.Array] = None,
+    use_kernel: bool = False,
 ) -> Matches:
     """Blocked similarity join of queries ``Q (nq, m)`` vs corpus ``C (nc, m)``.
 
@@ -75,7 +76,27 @@ def similarity_topk(
     ``O(block_rows · nc)`` instead of ``O(nq · nc)``. This is the workhorse for
     both the APSS self-join (``Q is C``) and retrieval scoring
     (1 query × 10⁶ candidates: ``nq = 1`` padded to a block).
+
+    ``use_kernel=True`` routes the whole join through the fused Pallas
+    kernel (``kernels.apss_block.apss_fused``): score tiles stay VMEM-only,
+    the output is the ``O(nq·k)`` match buffer, and the maxweight bound mask
+    gates per-tile MXU work. Offsets stay dynamic, so this is the path the
+    distributed ring/halfring schedules take. ``col_valid`` masks are not
+    supported by the kernel (only contiguous-prefix validity, which the
+    kernel derives from the unpadded corpus length).
     """
+    if use_kernel:
+        if col_valid is not None:
+            raise ValueError("use_kernel=True does not support col_valid")
+        from repro.kernels.apss_block.ops import apss_fused
+
+        bm = _kernel_tile(block_rows)
+        return apss_fused(
+            Q, C, float(threshold), k,
+            block_m=bm, block_n=bm,
+            row_offset=row_offset, col_offset=col_offset,
+            exclude_self=exclude_self,
+        )
     nq = Q.shape[0]
     Qp, _ = pad_rows(Q, block_rows)
     nblocks = Qp.shape[0] // block_rows
@@ -100,6 +121,11 @@ def similarity_topk(
     return jax.tree.map(lambda x: x[:nq], out)
 
 
+def _kernel_tile(block_rows: int) -> int:
+    """Clamp the user's row-block knob to an MXU-aligned kernel tile."""
+    return min(max(128, block_rows), 256)
+
+
 def apss_blocked(
     D: jax.Array,
     threshold: float,
@@ -111,15 +137,23 @@ def apss_blocked(
 ) -> Matches | tuple[Matches, PruneStats]:
     """Blocked APSS self-join with optional block-prune accounting.
 
-    ``use_kernel=True`` routes the score computation through the Pallas
-    ``apss_block`` kernel (fused threshold + ``@pl.when`` tile skipping from
-    the maxweight bound mask — MXU work for provably-dead tiles is actually
-    skipped on TPU; interpret mode on CPU). The XLA path computes every tile
-    and uses the mask for accounting only. Exactness is independent of the
-    mask; see ``core.pruning``.
+    ``use_kernel=True`` routes the self-join through the fused streaming
+    Pallas kernel (``kernels.apss_block.apss_fused``): matmul → threshold →
+    top-k merge → count in one kernel, ``@pl.when`` tile skipping from the
+    maxweight bound mask, and an ``O(n·k)`` ``Matches`` output — the ``n×n``
+    score matrix is never materialized in HBM (TPU compiled; interpret mode
+    on CPU). The XLA path computes every tile and uses the mask for
+    accounting only. Exactness is independent of the mask; see
+    ``core.pruning``.
     """
     if use_kernel:
-        m = _apss_blocked_kernel(D, threshold, k, block_rows=block_rows)
+        from repro.kernels.apss_block.ops import apss_fused
+
+        bm = _kernel_tile(block_rows)
+        m = apss_fused(
+            D, D, float(threshold), k, block_m=bm, block_n=bm,
+            exclude_self=True,
+        )
     else:
         m = similarity_topk(
             D, D, threshold, k, block_rows=block_rows, exclude_self=True
@@ -129,22 +163,6 @@ def apss_blocked(
     Dp, _ = pad_rows(D, block_rows)
     mask = block_prune_mask(Dp, Dp, threshold, block_rows)
     return m, prune_stats(mask)
-
-
-def _apss_blocked_kernel(D, threshold, k, *, block_rows):
-    """Kernel-backed self-join: thresholded score tiles from Pallas, then
-    match extraction per row block (scores below t arrive as exact 0)."""
-    from repro.kernels.apss_block.ops import apss_block_matmul
-
-    n = D.shape[0]
-    bm = min(max(128, block_rows), 256)
-    s = apss_block_matmul(
-        D, D, float(threshold), block_m=bm, block_n=bm,
-        block_k=min(512, max(128, D.shape[1])),
-    )
-    # The kernel zeroes sub-threshold entries; extract on the dense result.
-    # Self-pairs sit on the diagonal and are masked by extract_matches.
-    return extract_matches(s, threshold, k, exclude_self=True)
 
 
 @functools.partial(jax.jit, static_argnames=("threshold", "k", "block_rows"))

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
 from repro.core.apss import similarity_topk
 from repro.core.matches import (
     Matches,
@@ -71,8 +72,7 @@ def _matches_specs(axis) -> Matches:
 
 def _pvary(tree, axis_name):
     """Mark constants as device-varying over `axis_name` (loop-carry typing)."""
-    names = axis_name if isinstance(axis_name, tuple) else (axis_name,)
-    return jax.tree.map(lambda a: lax.pcast(a, names, to="varying"), tree)
+    return jax.tree.map(lambda a: pvary(a, axis_name), tree)
 
 
 def _to_wire(x: jax.Array) -> jax.Array:
@@ -117,12 +117,18 @@ def apss_horizontal(
     *,
     schedule: str = "ring",
     block_rows: int = 512,
+    use_kernel: bool = False,
 ) -> Matches:
     """Distributed APSS with row (vector) sharding.
 
     ``D (n, m)`` global; rows sharded over ``axis_name`` (a name or tuple of
     names — tuples treat the axes jointly/row-major); ``n`` must divide
     evenly. Returns global :class:`Matches` with rows sharded the same way.
+
+    ``use_kernel=True`` scores every local×visiting block pair with the
+    fused streaming Pallas kernel (``O(rows·k)`` output, VMEM-resident score
+    tiles) instead of the XLA einsum + ``extract_matches`` pair — the ring
+    step's dynamic column offset feeds the kernel directly.
     """
     if isinstance(axis_name, (tuple, list)):
         axis_name = tuple(axis_name)
@@ -141,25 +147,31 @@ def apss_horizontal(
         body = functools.partial(
             _horizontal_allgather, threshold=threshold, k=k,
             axis_name=axis_name, block_rows=block_rows,
+            use_kernel=use_kernel,
         )
     elif schedule == "ring":
         body = functools.partial(
             _horizontal_ring, threshold=threshold, k=k,
             axis_name=axis_name, p=p, block_rows=block_rows,
+            use_kernel=use_kernel,
         )
     elif schedule == "halfring":
         body = functools.partial(
             _horizontal_halfring, threshold=threshold, k=k,
             axis_name=axis_name, p=p, block_rows=block_rows,
+            use_kernel=use_kernel,
         )
     else:
         raise ValueError(f"unknown horizontal schedule: {schedule}")
 
-    return jax.shard_map(
+    # The replication checker has no rule for pallas_call on some JAX
+    # versions; the kernel path is verified numerically by tests instead.
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=P(axis_name, None),
         out_specs=_matches_specs(axis_name),
+        check_vma=not use_kernel,
     )(D)
 
 
@@ -173,7 +185,9 @@ def _flat_axis_index(axis_name):
     return lax.axis_index(axis_name)
 
 
-def _horizontal_allgather(D_loc, *, threshold, k, axis_name, block_rows):
+def _horizontal_allgather(
+    D_loc, *, threshold, k, axis_name, block_rows, use_kernel=False
+):
     """Paper-faithful Alg. 6: all-gather the corpus, match local rows."""
     n_loc = D_loc.shape[0]
     me = _flat_axis_index(axis_name)
@@ -186,10 +200,13 @@ def _horizontal_allgather(D_loc, *, threshold, k, axis_name, block_rows):
         block_rows=min(block_rows, n_loc),
         exclude_self=True,
         row_offset=me * n_loc,
+        use_kernel=use_kernel,
     )
 
 
-def _horizontal_ring(D_loc, *, threshold, k, axis_name, p, block_rows):
+def _horizontal_ring(
+    D_loc, *, threshold, k, axis_name, p, block_rows, use_kernel=False
+):
     """Ring schedule: rotate row blocks; overlap send with compute."""
     n_loc, m = D_loc.shape
     me = lax.axis_index(axis_name)
@@ -202,6 +219,7 @@ def _horizontal_ring(D_loc, *, threshold, k, axis_name, p, block_rows):
             D_loc, buf, threshold, k,
             block_rows=bs, exclude_self=True,
             row_offset=row_off, col_offset=src * n_loc,
+            use_kernel=use_kernel,
         )
         return merge_matches(matches, m_new)
 
@@ -219,7 +237,9 @@ def _horizontal_ring(D_loc, *, threshold, k, axis_name, p, block_rows):
     return matches
 
 
-def _horizontal_halfring(D_loc, *, threshold, k, axis_name, p, block_rows):
+def _horizontal_halfring(
+    D_loc, *, threshold, k, axis_name, p, block_rows, use_kernel=False
+):
     """Half-ring: exploit S = Sᵀ — only ⌈(p-1)/2⌉ block hops.
 
     Each traveling block carries a "return caravan": the top-k backward
@@ -229,6 +249,15 @@ def _horizontal_halfring(D_loc, *, threshold, k, axis_name, p, block_rows):
     caravan, which hops along with the block. After ``p//2`` hops one static
     shift delivers the caravan home. Halves the large block traffic of the
     full ring; the caravan adds only O(k) words/row/hop.
+
+    Kernel path: the fused kernel extracts matches in-flight (the score
+    tile never leaves VMEM), so the two orientations are two kernel joins
+    with swapped offsets instead of one XLA einsum read twice. That keeps
+    the schedule's halved *wire* traffic but recomputes the tile's MXU work
+    for the mirror (≈ ring-fused compute); folding both orientations into
+    one kernel needs per-tile candidate packets + a cross-tile merge (the
+    ``apss_fused_compacted`` architecture) lifted into the ring loop — an
+    open item, see DESIGN.md §3.
     """
     n_loc, m = D_loc.shape
     me = lax.axis_index(axis_name)
@@ -240,6 +269,7 @@ def _horizontal_halfring(D_loc, *, threshold, k, axis_name, p, block_rows):
     matches = similarity_topk(
         D_loc, D_loc, threshold, k, block_rows=bs,
         exclude_self=True, row_offset=row_off, col_offset=row_off,
+        use_kernel=use_kernel,
     )
     if p == 1:
         return matches
@@ -247,6 +277,18 @@ def _horizontal_halfring(D_loc, *, threshold, k, axis_name, p, block_rows):
     def cross_tile(buf, s):
         src = jnp.mod(me - s, p)  # owner of `buf`
         col_off = src * n_loc
+        if use_kernel:
+            fwd = similarity_topk(
+                D_loc, buf, threshold, k, block_rows=bs,
+                exclude_self=True, row_offset=row_off, col_offset=col_off,
+                use_kernel=True,
+            )
+            bwd = similarity_topk(
+                buf, D_loc, threshold, k, block_rows=bs,
+                exclude_self=True, row_offset=col_off, col_offset=row_off,
+                use_kernel=True,
+            )
+            return fwd, bwd
         S = jnp.einsum(
             "im,jm->ij", D_loc, buf, preferred_element_type=jnp.float32
         )
@@ -335,7 +377,7 @@ def apss_vertical(
             _vertical_allreduce, threshold=threshold, k=k,
             axis_name=axis_name, block_rows=block_rows,
         )
-        out = jax.shard_map(
+        out = shard_map(
             fn, mesh=mesh, in_specs=P(None, axis_name),
             out_specs=Matches(values=P(), indices=P(), counts=P()),
         )(D)
@@ -347,7 +389,7 @@ def apss_vertical(
             _vertical_scatter, threshold=threshold, k=k,
             axis_name=axis_name, p=p, block_rows=block_rows,
         )
-        stacked = jax.shard_map(
+        stacked = shard_map(
             fn, mesh=mesh, in_specs=P(None, axis_name),
             out_specs=Matches(
                 values=P(None, axis_name, None),
@@ -366,7 +408,7 @@ def apss_vertical(
         # candidate union and psum-accumulated scores) but the static VMA
         # checker cannot see through all_gather-derived indexing; verified
         # numerically by tests instead.
-        out, stats = jax.shard_map(
+        out, stats = shard_map(
             fn, mesh=mesh, in_specs=P(None, axis_name),
             out_specs=(
                 Matches(values=P(), indices=P(), counts=P()),
@@ -381,7 +423,7 @@ def apss_vertical(
             _vertical_recursive, threshold=threshold, k=k,
             axis_name=axis_name, p=p, block_rows=block_rows, capacity=C,
         )
-        out, stats = jax.shard_map(
+        out, stats = shard_map(
             fn, mesh=mesh, in_specs=P(None, axis_name),
             out_specs=(
                 Matches(values=P(), indices=P(), counts=P()),
@@ -637,7 +679,7 @@ def apss_2d(
         threshold=threshold, k=k, row_axis=row_axis, col_axis=col_axis,
         q=q, r=r, block_rows=block_rows, capacity=C, accumulation=accumulation,
     )
-    out, stats = jax.shard_map(
+    out, stats = shard_map(
         fn,
         mesh=mesh,
         in_specs=P(row_axis, col_axis),
@@ -750,6 +792,7 @@ def apss_horizontal_hierarchical(
     axes: Sequence[str] = ("pod", "data"),
     *,
     block_rows: int = 512,
+    use_kernel: bool = False,
 ) -> Matches:
     """N-level nested ring for hierarchical interconnects.
 
@@ -781,7 +824,7 @@ def apss_horizontal_hierarchical(
             m_new = similarity_topk(
                 D_loc, _from_wire(buf, D_loc.dtype), threshold, k,
                 block_rows=bs, exclude_self=True, row_offset=row_off,
-                col_offset=own[0] * n_loc,
+                col_offset=own[0] * n_loc, use_kernel=use_kernel,
             )
             return buf, own, merge_matches(matches, m_new)
 
@@ -810,11 +853,12 @@ def apss_horizontal_hierarchical(
         _, _, matches = sweep(0, (_to_wire(D_loc), owner, matches0))
         return matches
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=P(axes, None),
         out_specs=_matches_specs(axes),
+        check_vma=not use_kernel,
     )(D)
 
 

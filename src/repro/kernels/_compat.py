@@ -1,0 +1,34 @@
+"""Pallas-TPU API shims shared by all kernels.
+
+``pltpu.CompilerParams`` (new name) vs ``pltpu.TPUCompilerParams`` (old
+name) — identical fields, renamed across JAX releases. Every kernel's
+``compiler_params=`` goes through :func:`tpu_compiler_params` so the
+try/except lives once instead of per kernel.
+"""
+
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under whichever name this JAX exposes.
+
+    Returns None when neither class exists (e.g. a CPU-only Pallas build);
+    ``pl.pallas_call(compiler_params=None)`` is accepted everywhere.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:  # pragma: no cover - pallas without a TPU plugin
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:  # pragma: no cover
+        return None
+    return cls(**kwargs)
+
+
+def vmem(shape, dtype):
+    """VMEM scratch allocation (TPU); plain buffer under interpret mode."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,2 +1,6 @@
-from repro.kernels.apss_block.ops import apss_block_matmul  # noqa: F401
+from repro.kernels.apss_block.ops import (  # noqa: F401
+    apss_block_matmul,
+    apss_fused,
+    apss_fused_compacted,
+)
 from repro.kernels.apss_block.ref import apss_block_reference  # noqa: F401

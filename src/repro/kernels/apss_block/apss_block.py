@@ -112,20 +112,16 @@ def apss_block_pallas(
 
 
 def _vmem(shape, dtype):
-    """VMEM scratch allocation (TPU); plain buffer under interpret mode."""
-    from jax.experimental.pallas import tpu as pltpu
+    from repro.kernels._compat import vmem
 
-    return pltpu.VMEM(shape, dtype)
+    return vmem(shape, dtype)
 
 
 def _tpu_params():
     """Mark (i, j) parallel and the feature axis sequential for the TPU
     pipeline; harmless under interpret mode."""
-    try:
-        from jax.experimental.pallas import tpu as pltpu
+    from repro.kernels._compat import tpu_compiler_params
 
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except Exception:  # pragma: no cover - older API fallback
-        return None
+    return tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )

@@ -1,0 +1,401 @@
+"""Pallas TPU kernels: streaming fused APSS match extraction.
+
+The seed ``apss_block`` kernel materializes the full thresholded ``n×n``
+score matrix in HBM and leaves match extraction to XLA — exactly the memory
+behaviour the paper's blocking/pruning lesson says must not scale with n².
+The two kernels here keep the dense score tile **VMEM-resident only** and
+emit a ``Matches``-shaped ``O(n·k)`` result, so HBM traffic is proportional
+to surviving candidates:
+
+1. :func:`apss_fused_pallas` — grid ``(i, j, kf)`` with column tiles scanned
+   innermost-but-one per row block. A VMEM running top-k buffer (values,
+   global column ids) plus exact per-row match counts persists across the
+   ``j`` axis; each tile fuses matmul → threshold → top-k merge → count.
+   The ``block_prune_mask`` gates MXU work per tile with ``@pl.when``
+   (a pruned tile still burns a pipeline slot — see kernel 2).
+
+2. :func:`apss_tile_candidates_pallas` — **live-tile compaction**: a 1-D
+   grid over a dense worklist of live ``(i, j)`` tile coordinates, driven
+   by scalar prefetch (``PrefetchScalarGridSpec``), so pruned tiles cost
+   zero pipeline slots. The worklist enumerates only upper-triangular tiles
+   of the self-join (S = Sᵀ) and the kernel emits per-tile top-k candidate
+   packets for BOTH orientations (forward = tile rows, backward = the
+   mirrored tile columns), halving MXU work; a small XLA scan folds the
+   packets into per-row-block ``Matches`` (``ops.apss_fused_compacted``).
+
+In-kernel top-k uses iterative max-extraction (max / first-argmax / mask),
+VPU-only ops that lower on Mosaic — ``lax.top_k``/sort do not. Cost is
+``k`` passes over ``(bm, k + bn)`` per tile, « the tile's MXU FLOPs.
+
+VMEM per step (defaults 256×256×512, f32): x+y tiles 1 MB, acc 256 KB,
+top-k buffers 2·256·k·4B « 16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._compat import tpu_compiler_params, vmem
+
+# Finite stand-in for -inf inside the kernel (keeps Mosaic select/max
+# NaN-free); converted to true -inf at the ops boundary. Any real similarity
+# is a dot product of normalized rows, |s| « 1e30.
+NEG_LARGE = -0.5e30
+_VALID = -0.25e30  # values above this are real candidates
+
+
+def _merge_topk(topv, topi, cand_v, cand_i, k: int):
+    """Merge candidate columns into a per-row top-k buffer. Exact.
+
+    ``topv/topi``: ``(bm, kb)`` running buffer (NEG_LARGE / -1 empty slots);
+    ``cand_v/cand_i``: ``(bm, c)`` new candidates with *disjoint* ids.
+    Returns the new ``(bm, kb)`` buffer holding the k best of the union
+    (slots beyond k stay empty). Iterative max-extraction: k rounds of
+    row-max, first-position select, mask-out — no sort, no lax.top_k.
+    """
+    bm, kb = topv.shape
+    allv = jnp.concatenate([topv, cand_v], axis=1)
+    alli = jnp.concatenate([topi, cand_i], axis=1)
+    cols = allv.shape[1]
+    colid = jax.lax.broadcasted_iota(jnp.int32, allv.shape, 1)
+    outv, outi = [], []
+    for _ in range(min(k, cols)):
+        m = jnp.max(allv, axis=1, keepdims=True)
+        pos = jnp.min(jnp.where(allv >= m, colid, cols), axis=1, keepdims=True)
+        sel = colid == pos
+        idx = jnp.sum(jnp.where(sel, alli, 0), axis=1, keepdims=True)
+        valid = m > _VALID
+        outv.append(jnp.where(valid, m, NEG_LARGE))
+        outi.append(jnp.where(valid, idx, -1))
+        allv = jnp.where(sel, NEG_LARGE, allv)
+    pad = kb - len(outv)
+    if pad:
+        outv.append(jnp.full((bm, pad), NEG_LARGE, jnp.float32))
+        outi.append(jnp.full((bm, pad), -1, jnp.int32))
+    return jnp.concatenate(outv, axis=1), jnp.concatenate(outi, axis=1)
+
+
+def _empty_buffers(bm: int, k: int):
+    return (
+        jnp.full((bm, k), NEG_LARGE, jnp.float32),
+        jnp.full((bm, k), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: streaming fused extraction, (i, j, kf) grid
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    mask_ref,   # (1, 1) i32 — live flag for this (i, j) tile
+    meta_ref,   # (1, 2) i32 — [row_offset, col_offset] (dynamic)
+    x_ref,      # (bm, bk)
+    y_ref,      # (bn, bk)
+    v_ref,      # out (bm, k) f32
+    i_ref,      # out (bm, k) i32
+    c_ref,      # out (bm, 1) i32
+    acc_ref,    # scratch (bm, bn) f32
+    topv_ref,   # scratch (bm, k) f32
+    topi_ref,   # scratch (bm, k) i32
+    cnt_ref,    # scratch (bm, 1) i32
+    *,
+    threshold: float,
+    k: int,
+    block_m: int,
+    block_n: int,
+    n_valid_cols: int,
+    exclude_self: bool,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kf = pl.program_id(2)
+    nj = pl.num_programs(1)
+    nkf = pl.num_programs(2)
+    live = mask_ref[0, 0] != 0
+
+    @pl.when((j == 0) & (kf == 0))
+    def _init_row_block():
+        topv_ref[...] = jnp.full_like(topv_ref, NEG_LARGE)
+        topi_ref[...] = jnp.full_like(topi_ref, -1)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when(kf == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _accumulate():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...],
+            y_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when((kf == nkf - 1) & live)
+    def _merge_tile():
+        row_off = meta_ref[0, 0]
+        col_off = meta_ref[0, 1]
+        s = acc_ref[...]
+        lcol = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        gcol = lcol + col_off
+        ok = (s >= jnp.float32(threshold)) & (lcol < n_valid_cols)
+        if exclude_self:
+            grow = (
+                row_off
+                + i * block_m
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            )
+            ok &= grow != gcol
+        cnt_ref[...] += jnp.sum(ok, axis=1, keepdims=True, dtype=jnp.int32)
+        cand_v = jnp.where(ok, s, NEG_LARGE)
+        cand_i = jnp.where(ok, gcol, -1)
+        newv, newi = _merge_topk(topv_ref[...], topi_ref[...], cand_v, cand_i, k)
+        topv_ref[...] = newv
+        topi_ref[...] = newi
+
+    @pl.when((j == nj - 1) & (kf == nkf - 1))
+    def _emit():
+        v_ref[...] = topv_ref[...]
+        i_ref[...] = topi_ref[...]
+        c_ref[...] = cnt_ref[...]
+
+
+def apss_fused_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    block_mask: jax.Array,
+    meta: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    n_valid_cols: int,
+    exclude_self: bool = True,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw pallas_call; shapes must be tile-divisible (see ops.py wrapper).
+
+    Args:
+      x: ``(n_rows, m)`` query rows (padded).
+      y: ``(n_cols, m)`` corpus rows (padded).
+      block_mask: ``(n_rows/bm, n_cols/bn)`` int32; 0 ⇒ tile provably dead.
+      meta: ``(1, 2)`` int32 ``[row_offset, col_offset]`` — global ids of
+        ``x[0]`` / ``y[0]`` (dynamic, for self-exclusion + global indices).
+      n_valid_cols: number of non-padding rows of ``y`` (static).
+
+    Returns ``(values (n_rows, k) f32, indices (n_rows, k) i32,
+    counts (n_rows, 1) i32)``. Empty slots are ``NEG_LARGE`` / ``-1``.
+    """
+    n_rows, m = x.shape
+    n_cols, m2 = y.shape
+    assert m == m2, (m, m2)
+    assert n_rows % block_m == 0, (n_rows, block_m)
+    assert n_cols % block_n == 0, (n_cols, block_n)
+    assert m % block_k == 0, (m, block_k)
+    grid = (n_rows // block_m, n_cols // block_n, m // block_k)
+    assert block_mask.shape == grid[:2], (block_mask.shape, grid)
+
+    kernel = functools.partial(
+        _fused_kernel,
+        threshold=threshold, k=k, block_m=block_m, block_n=block_n,
+        n_valid_cols=n_valid_cols, exclude_self=exclude_self,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kf: (i, j)),           # mask
+            pl.BlockSpec((1, 2), lambda i, j, kf: (0, 0)),           # meta
+            pl.BlockSpec((block_m, block_k), lambda i, j, kf: (i, kf)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, kf: (j, kf)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j, kf: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i, j, kf: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kf: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            vmem((block_m, block_n), jnp.float32),
+            vmem((block_m, k), jnp.float32),
+            vmem((block_m, k), jnp.int32),
+            vmem((block_m, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(block_mask.astype(jnp.int32), meta.astype(jnp.int32), x, y)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: live-tile compacted worklist, 1-D grid via scalar prefetch
+# ---------------------------------------------------------------------------
+
+
+def _tile_cand_kernel(
+    ij_ref,     # scalar-prefetch (2, T) i32 — live (i, j) tile coordinates
+    x_ref,      # (bm, bk)
+    y_ref,      # (bn, bk)
+    fv_ref,     # out (1, bm, k) f32 — forward candidates (tile rows)
+    fi_ref,     # out (1, bm, k) i32
+    fc_ref,     # out (1, bm, 1) i32
+    bv_ref,     # out (1, bn, k) f32 — backward candidates (mirror rows)
+    bi_ref,     # out (1, bn, k) i32
+    bc_ref,     # out (1, bn, 1) i32
+    acc_ref,    # scratch (bm, bn) f32
+    *,
+    threshold: float,
+    k: int,
+    block_m: int,
+    block_n: int,
+    n_valid: int,
+):
+    t = pl.program_id(0)
+    kf = pl.program_id(1)
+    nkf = pl.num_programs(1)
+
+    @pl.when(kf == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Every worklist tile is live: no @pl.when gate, no wasted pipeline slot.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kf == nkf - 1)
+    def _emit():
+        ib = ij_ref[0, t]
+        jb = ij_ref[1, t]
+        s = acc_ref[...]
+        grow = ib * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        gcol = jb * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = (
+            (s >= jnp.float32(threshold))
+            & (grow != gcol)
+            & (grow < n_valid)
+            & (gcol < n_valid)
+        )
+        empty_v, empty_i = _empty_buffers(block_m, k)
+        fv, fi = _merge_topk(
+            empty_v, empty_i,
+            jnp.where(ok, s, NEG_LARGE), jnp.where(ok, gcol, -1), k,
+        )
+        fv_ref[0] = fv
+        fi_ref[0] = fi
+        fc_ref[0] = jnp.sum(ok, axis=1, keepdims=True, dtype=jnp.int32)
+
+        diag = ib == jb
+
+        @pl.when(diag)
+        def _no_mirror():
+            # The diagonal tile's pairs are fully covered forward; a mirror
+            # copy would double-count. Emit an empty packet.
+            ev, ei = _empty_buffers(block_n, k)
+            bv_ref[0] = ev
+            bi_ref[0] = ei
+            bc_ref[0] = jnp.zeros((block_n, 1), jnp.int32)
+
+        @pl.when(jnp.logical_not(diag))
+        def _mirror():
+            # S = Sᵀ: the same VMEM tile scores the mirrored pairs — rows
+            # become the y-block's vectors, candidate ids the x-block's
+            # (grow.T, NOT gcol.T: gcol.T holds the mirrored row's own id).
+            sT = s.T
+            okT = ok.T
+            ev, ei = _empty_buffers(block_n, k)
+            bv, bi = _merge_topk(
+                ev, ei,
+                jnp.where(okT, sT, NEG_LARGE), jnp.where(okT, grow.T, -1), k,
+            )
+            bv_ref[0] = bv
+            bi_ref[0] = bi
+            bc_ref[0] = jnp.sum(okT, axis=1, keepdims=True, dtype=jnp.int32)
+
+
+def apss_tile_candidates_pallas(
+    D: jax.Array,
+    ij: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    n_valid: int,
+    interpret: bool = False,
+):
+    """Per-live-tile candidate packets for the self-join (see ops wrapper).
+
+    ``ij`` is the dense ``(2, T)`` worklist of live upper-triangular tile
+    coordinates (scalar-prefetched: the (i, j) → DMA index computation runs
+    before the kernel body, so the pipeline streams exactly the live tiles
+    and nothing else).
+
+    Returns forward packets ``(T, bm, k)×2 + (T, bm, 1)`` and backward
+    (mirror) packets ``(T, bn, k)×2 + (T, bn, 1)``. Total output is
+    ``O(live_tiles · block · k)`` — candidate-proportional, never n².
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    n, m = D.shape
+    assert n % block_m == 0 and n % block_n == 0, (n, block_m, block_n)
+    assert m % block_k == 0, (m, block_k)
+    T = ij.shape[1]
+    assert ij.shape == (2, T)
+    nkf = m // block_k
+
+    kernel = functools.partial(
+        _tile_cand_kernel,
+        threshold=threshold, k=k, block_m=block_m, block_n=block_n,
+        n_valid=n_valid,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, nkf),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda t, kf, ij: (ij[0, t], kf)),
+            pl.BlockSpec((block_n, block_k), lambda t, kf, ij: (ij[1, t], kf)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_m, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_m, 1), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_n, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_n, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_n, 1), lambda t, kf, ij: (t, 0, 0)),
+        ],
+        scratch_shapes=[vmem((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, block_m, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, block_m, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, block_m, 1), jnp.int32),
+            jax.ShapeDtypeStruct((T, block_n, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, block_n, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, block_n, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(ij.astype(jnp.int32), D, D)

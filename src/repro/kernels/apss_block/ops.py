@@ -1,7 +1,20 @@
-"""Public jit'd wrapper for the apss_block kernel.
+"""Public jit'd wrappers for the apss_block kernels.
 
 Handles padding to tile multiples, optional automatic bound-mask computation
 (``core.pruning``), and the CPU/TPU dispatch (interpret mode off-TPU).
+
+Three entry points:
+
+- :func:`apss_block_matmul` — the seed dense-output kernel: thresholded
+  ``n×n`` score matrix in HBM (kept for benchmarks/validation; O(n²) HBM).
+- :func:`apss_fused` — streaming fused extraction: matmul → threshold →
+  top-k merge → count in one kernel, ``Matches``-shaped ``O(n·k)`` output.
+  The ``n×n`` score matrix never exists in HBM.
+- :func:`apss_fused_compacted` — fused extraction driven by a dense
+  worklist of live upper-triangular tiles (scalar prefetch): pruned tiles
+  cost zero pipeline slots and S = Sᵀ halves MXU work. Self-join only;
+  the live mask is compacted on the host, so the call is not traceable
+  under jit (the inner per-worklist computation is).
 """
 
 from __future__ import annotations
@@ -10,9 +23,16 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.matches import NEG_INF, Matches, empty_matches
 from repro.core.pruning import block_prune_mask
 from repro.kernels.apss_block.apss_block import apss_block_pallas
+from repro.kernels.apss_block.fused import (
+    _VALID,
+    apss_fused_pallas,
+    apss_tile_candidates_pallas,
+)
 
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
@@ -77,3 +97,180 @@ def apss_block_matmul(
         interpret=interpret,
     )
     return out[:n_rows, :n_cols]
+
+
+def _pick_bk(m: int, block_k: int) -> int:
+    """Feature-axis tile: requested size, shrunk for narrow inputs so the
+    zero-padding stays < one tile (MXU lane alignment: multiples of 128)."""
+    return min(block_k, max(128, -(-m // 128) * 128))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "k", "block_m", "block_n", "block_k",
+        "auto_mask", "exclude_self", "interpret",
+    ),
+)
+def apss_fused(
+    x: jax.Array,
+    y: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_mask: jax.Array | None = None,
+    auto_mask: bool = True,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    row_offset: jax.Array | int = 0,
+    col_offset: jax.Array | int = 0,
+    exclude_self: bool = True,
+    interpret: bool | None = None,
+) -> Matches:
+    """Fused streaming similarity join: ``Matches`` straight from the kernel.
+
+    The thresholded score matrix never reaches HBM — the kernel scans column
+    tiles per row block with a VMEM-resident running top-k + exact counts,
+    so output memory is ``O(n_rows · k)``. Offsets are dynamic (traced), so
+    this drops into the distributed ring/halfring schedules where the
+    column offset depends on the ring step.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    nq, m = x.shape
+    nc = y.shape[0]
+    bk = _pick_bk(m, block_k)
+    xp = _pad_to(x, block_m, bk)
+    yp = _pad_to(y, block_n, bk)
+
+    if block_mask is None:
+        if auto_mask:
+            block_mask = block_prune_mask(
+                xp, yp, threshold, block_m, block_n, use_minsize=False
+            )
+        else:
+            block_mask = jnp.ones(
+                (xp.shape[0] // block_m, yp.shape[0] // block_n), jnp.int32
+            )
+
+    meta = jnp.stack(
+        [jnp.asarray(row_offset, jnp.int32), jnp.asarray(col_offset, jnp.int32)]
+    ).reshape(1, 2)
+    values, indices, counts = apss_fused_pallas(
+        xp, yp, block_mask, meta, float(threshold), k,
+        block_m=block_m, block_n=block_n, block_k=bk,
+        n_valid_cols=nc, exclude_self=exclude_self, interpret=interpret,
+    )
+    values = jnp.where(indices >= 0, values, NEG_INF)
+    return Matches(
+        values=values[:nq],
+        indices=indices[:nq],
+        counts=counts[:nq, 0],
+    )
+
+
+def _merge_packet(cv, ci, cc, blk, pv, pi, pc, k: int):
+    """Fold one tile candidate packet into the per-row-block running top-k.
+
+    Packet ids are disjoint from the buffer's (each column block is visited
+    once per row block; forward/backward packets for the same row block come
+    from disjoint column ranges), so a plain top-k over the concat is exact.
+    """
+    cur_v = jax.lax.dynamic_index_in_dim(cv, blk, 0, keepdims=False)
+    cur_i = jax.lax.dynamic_index_in_dim(ci, blk, 0, keepdims=False)
+    cur_c = jax.lax.dynamic_index_in_dim(cc, blk, 0, keepdims=False)
+    vals = jnp.concatenate([cur_v, pv], axis=1)
+    idxs = jnp.concatenate([cur_i, pi], axis=1)
+    tv, sel = jax.lax.top_k(vals, k)
+    ti = jnp.take_along_axis(idxs, sel, axis=1)
+    ti = jnp.where(tv > _VALID, ti, -1)
+    cv = jax.lax.dynamic_update_index_in_dim(cv, tv, blk, 0)
+    ci = jax.lax.dynamic_update_index_in_dim(ci, ti, blk, 0)
+    cc = jax.lax.dynamic_update_index_in_dim(cc, cur_c + pc, blk, 0)
+    return cv, ci, cc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "k", "block_m", "block_k", "n_valid", "grid_m",
+        "interpret",
+    ),
+)
+def _compacted_inner(
+    Dp, ij, *, threshold, k, block_m, block_k, n_valid, grid_m, interpret
+):
+    fv, fi, fc, bv, bi, bc = apss_tile_candidates_pallas(
+        Dp, ij, float(threshold), k,
+        block_m=block_m, block_n=block_m, block_k=block_k,
+        n_valid=n_valid, interpret=interpret,
+    )
+
+    def step(carry, inp):
+        cv, ci, cc = carry
+        ib, jb, fv_t, fi_t, fc_t, bv_t, bi_t, bc_t = inp
+        cv, ci, cc = _merge_packet(cv, ci, cc, ib, fv_t, fi_t, fc_t, k)
+        # Mirror packet (empty for diagonal tiles): rows of block jb.
+        cv, ci, cc = _merge_packet(cv, ci, cc, jb, bv_t, bi_t, bc_t, k)
+        return (cv, ci, cc), None
+
+    carry0 = (
+        jnp.full((grid_m, block_m, k), -jnp.inf, jnp.float32),
+        jnp.full((grid_m, block_m, k), -1, jnp.int32),
+        jnp.zeros((grid_m, block_m), jnp.int32),
+    )
+    (cv, ci, cc), _ = jax.lax.scan(
+        step, carry0, (ij[0], ij[1], fv, fi, fc[..., 0], bv, bi, bc[..., 0])
+    )
+    values = jnp.where(ci >= 0, cv, NEG_INF).reshape(grid_m * block_m, k)
+    indices = ci.reshape(grid_m * block_m, k)
+    counts = cc.reshape(grid_m * block_m)
+    return values, indices, counts
+
+
+def apss_fused_compacted(
+    D: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_m: int = 256,
+    block_k: int = 512,
+    use_minsize: bool = True,
+    interpret: bool | None = None,
+) -> Matches:
+    """Self-join via the live-tile worklist kernel (maximum pruning win).
+
+    The block bound mask is compacted ON THE HOST into a dense list of live
+    upper-triangular ``(i, j)`` tile coordinates; the kernel's 1-D grid then
+    runs exactly ``live`` steps (a pruned tile costs nothing, vs. a masked
+    no-op pipeline slot in :func:`apss_fused`) and each off-diagonal tile is
+    computed once for both orientations (S = Sᵀ). Host compaction makes this
+    entry non-traceable; everything downstream of the worklist is jitted.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, m = D.shape
+    bk = _pick_bk(m, block_k)
+    Dp = _pad_to(D, block_m, bk)
+    grid_m = Dp.shape[0] // block_m
+
+    mask = block_prune_mask(
+        Dp, Dp, threshold, block_m, block_m, use_minsize=use_minsize
+    )
+    live = np.asarray(mask)
+    live = live | live.T  # minsize bound is asymmetric; a pair is live if
+    live = np.triu(live)  # either orientation is, and we compute j ≥ i only
+    iu, ju = np.nonzero(live)
+    if iu.size == 0:
+        return empty_matches(n, k)
+    ij = jnp.asarray(np.stack([iu, ju]).astype(np.int32))
+
+    values, indices, counts = _compacted_inner(
+        Dp, ij, threshold=float(threshold), k=k, block_m=block_m,
+        block_k=bk, n_valid=n, grid_m=grid_m, interpret=interpret,
+    )
+    return Matches(
+        values=values[:n], indices=indices[:n], counts=counts[:n]
+    )

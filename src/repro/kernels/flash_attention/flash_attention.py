@@ -106,6 +106,8 @@ def flash_attention_pallas(
     )
     from jax.experimental.pallas import tpu as pltpu
 
+    from repro.kernels._compat import tpu_compiler_params
+
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -131,7 +133,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -4,12 +4,14 @@ Defined as a FUNCTION (not module-level state) so importing this module never
 touches jax device initialization — critical because the dry-run must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init,
 while smoke tests must see the 1 real device.
+
+All mesh construction routes through ``repro.compat.make_mesh`` so the
+``axis_types`` / ``AxisType`` API drift is absorbed in one place.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,13 +22,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for multi-device unit tests (8 forced host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
 from repro.distributed.sharding import shard
 from repro.models.layers import dense_init
 
@@ -232,7 +233,7 @@ def moe_ffn_ep(
         return y, aux, dropped
 
     daxes = tuple(a for a in data_axes if a in mesh.shape) or None
-    y, aux, dropped = jax.shard_map(
+    y, aux, dropped = shard_map(
         inner,
         mesh=mesh,
         in_specs=(

@@ -31,27 +31,20 @@ def corpus():
 
 @pytest.fixture(scope="session")
 def mesh8():
-    import jax
+    from repro.compat import make_mesh
 
-    return jax.make_mesh(
-        (8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return make_mesh((8,), ("data",))
 
 
 @pytest.fixture(scope="session")
 def mesh8_model():
-    import jax
+    from repro.compat import make_mesh
 
-    return jax.make_mesh(
-        (8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return make_mesh((8,), ("model",))
 
 
 @pytest.fixture(scope="session")
 def mesh4x2():
-    import jax
+    from repro.compat import make_mesh
 
-    return jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((4, 2), ("data", "model"))

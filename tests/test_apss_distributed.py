@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.core.apss import apss_reference
 from repro.core.distributed import (
     apss,
@@ -75,10 +76,7 @@ def test_2d(corpus, mesh4x2, ref, accumulation):
 
 
 def test_hierarchical_2level(corpus, ref):
-    mesh = jax.make_mesh(
-        (2, 4), ("pod", "data"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = make_mesh((2, 4), ("pod", "data"))
     got = jax.jit(
         lambda d: apss_horizontal_hierarchical(
             d, T, K, mesh, ("pod", "data"), block_rows=16
@@ -88,10 +86,7 @@ def test_hierarchical_2level(corpus, ref):
 
 
 def test_hierarchical_3level(corpus, ref):
-    mesh = jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     got = jax.jit(
         lambda d: apss_horizontal_hierarchical(
             d, T, K, mesh, ("pod", "data", "model"), block_rows=16

@@ -1,0 +1,224 @@
+"""Fused streaming match extraction: exactness on adversarial shapes plus
+the load-bearing memory regression — the kernel-backed self-join must never
+materialize an (n, n) score matrix in HBM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apss import (
+    apss_blocked,
+    apss_reference,
+    normalize_rows,
+    similarity_topk,
+)
+from repro.core.distributed import apss_horizontal
+from repro.core.graph import match_set
+from repro.kernels.apss_block.ops import apss_fused, apss_fused_compacted
+
+T, K = 0.35, 16
+RNG = np.random.default_rng(7)
+
+
+def _corp(n, m, density=0.3, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    D = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    D *= rng.random((n, m)) < density
+    return np.asarray(normalize_rows(jnp.asarray(D)))
+
+
+def _check(got, ref):
+    assert match_set(got) == match_set(ref)
+    np.testing.assert_array_equal(np.asarray(got.counts), np.asarray(ref.counts))
+    # Directed per-row index sets (undirected match_set can't see a row
+    # reported with a wrong — e.g. self-referential — partner id when the
+    # true pair is also covered from the other direction). Rows at capacity
+    # may legitimately differ under value ties, so compare below capacity.
+    gi, ri = np.asarray(got.indices), np.asarray(ref.indices)
+    under = np.asarray(ref.counts) <= ref.capacity
+    for r in np.nonzero(under)[0]:
+        assert set(gi[r][gi[r] >= 0]) == set(ri[r][ri[r] >= 0]), r
+
+
+# -- exactness ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,m",
+    [
+        (256, 256),   # tile-multiple
+        (130, 100),   # both axes ragged → row/col/feature padding
+        (257, 513),   # off-by-one over tile boundaries
+    ],
+)
+def test_fused_selfjoin_adversarial_shapes(n, m):
+    D = jnp.asarray(_corp(n, m, seed=n))
+    ref = apss_reference(D, T, K)
+    got = apss_fused(D, D, T, K, block_m=128, block_n=128, block_k=128)
+    _check(got, ref)
+
+
+def test_fused_equals_blocked_use_kernel(corpus):
+    D = jnp.asarray(corpus)
+    ref = apss_reference(D, T, K)
+    got = apss_blocked(D, T, K, block_rows=128, use_kernel=True)
+    _check(got, ref)
+
+
+def test_fused_all_pruned_mask_is_empty():
+    """An explicitly dead mask yields zero matches and zero counts even
+    though the raw scores pass the threshold."""
+    D = jnp.asarray(_corp(128, 96, seed=1))
+    mask = jnp.zeros((1, 1), jnp.int32)
+    got = apss_fused(D, D, 0.0, K, block_mask=mask, block_m=128, block_n=128)
+    assert int(got.counts.sum()) == 0
+    assert (np.asarray(got.indices) == -1).all()
+    assert not np.isfinite(np.asarray(got.values)).any()
+
+
+def test_fused_threshold_above_any_bound_prunes_everything():
+    """t > m bounds every tile dead (ub ≤ m for unit rows): the auto-mask
+    kills the whole grid and the result must equal the (empty) oracle."""
+    D = jnp.asarray(_corp(64, 48, seed=2))
+    t = float(D.shape[1] + 1)
+    ref = apss_reference(D, t, K)
+    got = apss_fused(D, D, t, K, block_m=128, block_n=128)
+    _check(got, ref)
+    assert int(got.counts.sum()) == 0
+
+
+def test_fused_overflow_rows_counts_stay_exact():
+    """Rows with more matches than capacity: counts are exact (> k, flagged
+    by overflowed()), the k slots hold true top values."""
+    one = np.zeros((1, 64), np.float32)
+    one[0, 0] = 1.0
+    D = jnp.asarray(np.repeat(one, 32, axis=0))  # 32 identical unit rows
+    k = 4
+    got = apss_fused(D, D, 0.5, k, block_m=128, block_n=128)
+    assert (np.asarray(got.counts) == 31).all()
+    assert bool(got.overflowed().all())
+    np.testing.assert_allclose(np.asarray(got.values), 1.0)
+
+
+def test_fused_join_with_offsets_matches_xla_path():
+    Q = jnp.asarray(_corp(37, 80, seed=3))
+    C = jnp.asarray(_corp(90, 80, seed=4))
+    want = similarity_topk(Q, C, 0.2, 8, block_rows=16, col_offset=100)
+    got = similarity_topk(
+        Q, C, 0.2, 8, block_rows=16, col_offset=100, use_kernel=True
+    )
+    np.testing.assert_array_equal(got.counts, want.counts)
+    np.testing.assert_array_equal(got.indices, want.indices)
+    np.testing.assert_allclose(
+        np.asarray(got.values), np.asarray(want.values), atol=1e-6
+    )
+
+
+# -- compacted (live-tile worklist) path --------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(256, 256), (130, 100)])
+def test_compacted_selfjoin_exact(n, m):
+    D = jnp.asarray(_corp(n, m, seed=n + 1))
+    ref = apss_reference(D, T, K)
+    got = apss_fused_compacted(D, T, K, block_m=128, block_k=128)
+    _check(got, ref)
+
+
+def test_compacted_zipfian_corpus_exact():
+    from repro.data.synthetic import synthetic_corpus
+
+    D = jnp.asarray(synthetic_corpus(256, 384, 20, seed=5))
+    ref = apss_reference(D, 0.4, K)
+    got = apss_fused_compacted(D, 0.4, K, block_m=128, block_k=128)
+    _check(got, ref)
+
+
+def test_compacted_all_pruned_returns_empty():
+    D = jnp.asarray(_corp(64, 48, seed=6))
+    t = float(D.shape[1] + 1)
+    got = apss_fused_compacted(D, t, K, block_m=128, block_k=128)
+    assert got.values.shape == (64, K)
+    assert int(got.counts.sum()) == 0
+
+
+def test_compacted_mirror_packet_reports_partner_id():
+    """Regression: a match covered ONLY by the mirror orientation of an
+    upper-triangular tile must report the partner's id, not the row's own
+    (gcol.T vs grow.T in the backward packet)."""
+    rng = np.random.default_rng(11)
+    D = np.array(_corp(256, 64, density=1.0, seed=11))
+    # Make rows 5 and 200 (different 128-blocks) near-duplicates.
+    D[200] = D[5] + 0.01 * np.abs(rng.standard_normal(64)).astype(np.float32)
+    D = np.asarray(normalize_rows(jnp.asarray(D)))
+    t = 0.98
+    S = D @ D.T
+    np.fill_diagonal(S, 0.0)
+    assert (S[200] >= t).sum() == 1 and S[200].argmax() == 5  # setup holds
+    got = apss_fused_compacted(jnp.asarray(D), t, 8, block_m=128, block_k=64)
+    assert int(got.counts[200]) == 1
+    assert int(got.indices[200, 0]) == 5
+    assert int(got.indices[5, 0]) == 200
+
+
+def test_compacted_overflow_rows_counts_stay_exact():
+    one = np.zeros((1, 64), np.float32)
+    one[0, 0] = 1.0
+    D = jnp.asarray(np.repeat(one, 32, axis=0))
+    got = apss_fused_compacted(D, 0.5, 4, block_m=128, block_k=128)
+    assert (np.asarray(got.counts) == 31).all()
+    assert bool(got.overflowed().all())
+
+
+# -- memory regression: no O(n²) HBM buffer on the kernel path ----------------
+
+
+def test_fused_path_never_materializes_nxn():
+    """The jaxpr of the kernel-backed self-join must contain no (n, n) f32
+    intermediate — the score matrix lives only in VMEM tiles. The dense
+    seed kernel is the positive control (guards the string probe itself)."""
+    n, m = 512, 256
+    D = jnp.asarray(_corp(n, m, seed=8))
+
+    fused = str(
+        jax.make_jaxpr(
+            lambda d: apss_blocked(d, T, K, block_rows=128, use_kernel=True)
+        )(D)
+    )
+    assert f"f32[{n},{n}]" not in fused
+
+    from repro.kernels.apss_block.ops import apss_block_matmul
+
+    dense = str(
+        jax.make_jaxpr(
+            lambda d: apss_block_matmul(
+                d, d, T, block_m=128, block_n=128, block_k=128
+            )
+        )(D)
+    )
+    assert f"f32[{n},{n}]" in dense  # positive control
+
+
+def test_fused_output_buffers_are_n_by_k():
+    n = 512
+    D = jnp.asarray(_corp(n, 256, seed=9))
+    got = apss_blocked(D, T, K, block_rows=128, use_kernel=True)
+    assert got.values.shape == (n, K)
+    assert got.indices.shape == (n, K)
+    assert got.counts.shape == (n,)
+
+
+# -- distributed schedules on the fused kernel --------------------------------
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring", "halfring"])
+def test_horizontal_schedules_use_kernel_exact(corpus, mesh8, schedule):
+    D = jnp.asarray(corpus)
+    ref = apss_reference(D, T, K)
+    got = jax.jit(
+        lambda d: apss_horizontal(
+            d, T, K, mesh8, schedule=schedule, block_rows=16, use_kernel=True
+        )
+    )(D)
+    _check(got, ref)

@@ -11,7 +11,10 @@ The load-bearing guarantees of the paper's method:
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.apss import apss_reference, normalize_rows
 from repro.core.graph import match_set

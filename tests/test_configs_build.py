@@ -5,6 +5,7 @@ compile (which lives in launch/dryrun.py)."""
 import jax
 import pytest
 
+from repro.compat import make_mesh
 from repro.configs import ASSIGNED, get_arch
 from repro.distributed.sharding import use_mesh
 
@@ -12,10 +13,7 @@ from repro.distributed.sharding import use_mesh
 @pytest.fixture(scope="module")
 def small_mesh():
     # axis names match production; sizes divide all assigned shapes
-    return jax.make_mesh(
-        (2, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((2, 2), ("data", "model"))
 
 
 ALL_CELLS = [

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh
 from repro.configs import get_arch
 from repro.launch.train import make_lm_train_step
 from repro.models.moe import init_moe, moe_ffn, moe_ffn_ep
@@ -18,10 +19,7 @@ from repro.optim import adamw_init
 
 @pytest.fixture(scope="module")
 def mesh2x4():
-    return jax.make_mesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((2, 4), ("data", "model"))
 
 
 def test_ep_moe_matches_dense_dispatch(mesh2x4):

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.data import (
     GraphPipeline,
@@ -131,7 +132,7 @@ def test_compression_error_feedback_invariant(mesh8):
         return recon
 
     recon = jax.jit(
-        jax.shard_map(
+        shard_map(
             f, mesh=mesh8, in_specs=(P("data"), P()), out_specs=P(),
             check_vma=False,
         )
