@@ -12,14 +12,12 @@ corpus (the block-pruning-friendly regime — see ``data.synthetic``):
                    tiles cost zero grid steps, upper-triangular tiles only
                    (S = Sᵀ)
 
-``run`` emits the usual CSV lines at a CPU-friendly n; ``write_json`` runs
-the same comparison at production-proof scale (n ≥ 4096) and writes
-``BENCH_apss.json`` — the perf trajectory seed for the streaming path.
+``run`` emits the usual CSV lines at a CPU-friendly n; ``measure`` runs
+the same comparison at production-proof scale (n ≥ 4096) for the
+``BENCH_apss.json`` artifact (written by ``run.py --json``).
 """
 
 from __future__ import annotations
-
-import json
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +66,8 @@ def _variants(threshold: float):
 
 
 def _measure(n: int, threshold: float, *, warmup: int, iters: int):
+    import numpy as np
+
     D = _corpus(n)
     mask = block_prune_mask(D, D, threshold, BM, BM, use_minsize=False)
     stats = prune_stats(mask)
@@ -77,6 +77,7 @@ def _measure(n: int, threshold: float, *, warmup: int, iters: int):
         "k": K,
         "threshold": threshold,
         "block": BM,
+        "density": float(np.count_nonzero(np.asarray(D))) / D.size,
         "live_tile_fraction": float(stats.live_fraction),
         "live_tiles": int(stats.live_blocks),
         "total_tiles": int(stats.total_blocks),
@@ -84,8 +85,7 @@ def _measure(n: int, threshold: float, *, warmup: int, iters: int):
     }
     counts = {}
     for name, fn in _variants(threshold).items():
-        us = time_fn(fn, D, warmup=warmup, iters=iters)
-        res = fn(D)
+        us, res = time_fn(fn, D, warmup=warmup, iters=iters, return_result=True)
         counts[name] = int(res.counts.sum()) if hasattr(res, "counts") else None
         out["variants"][name] = {"us_per_call": us}
     # All variants must agree on the exact directed match count.
@@ -103,9 +103,8 @@ def run(lines: list) -> None:
         ))
 
 
-def write_json(path: str, n: int = 4096, threshold: float = 0.4) -> dict:
-    r = _measure(n, threshold, warmup=1, iters=2)
-    with open(path, "w") as f:
-        json.dump(r, f, indent=2)
-        f.write("\n")
-    return r
+def measure(n: int = 4096, threshold: float = 0.4) -> dict:
+    """The streaming comparison dict. No file I/O here: ``run.py --json``
+    is the single writer of BENCH_apss.json (this + the sparse density
+    sweep), so the artifact schema cannot drift between writers."""
+    return _measure(n, threshold, warmup=1, iters=2)

@@ -1,0 +1,129 @@
+"""Sparse vs dense APSS across the paper's density regime.
+
+The paper's corpora sit at density ≲ 1% (Table 1) — exactly where dense
+tile matmuls burn MXU cycles on zeros. This suite sweeps density over the
+CSR-native clustered Zipfian corpus (``data.sparse``) and compares, at each
+point:
+
+  dense-fused       the dense streaming kernel (``apss_fused``) on the
+                    densified corpus — every tile, `@pl.when` mask gating
+  dense-compacted   dense live-tile worklist (``apss_fused_compacted``)
+  sparse-xla        inverted-index worklist + support-compacted CSR tile
+                    scoring, XLA scan (the off-TPU production path)
+  sparse-kernel     same worklist through the CSR tile Pallas kernel
+
+All four must agree on the exact directed match count (asserted). Each
+entry also records the realized density, the dense vs sparse (inverted
+index + exact nnz) live-tile fractions, and the support width ``S`` that
+replaces ``m`` in the sparse tile contraction — the quantities that make
+the perf trajectory interpretable (see BENCH_apss.json schema).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_fn
+
+DENSITIES = (0.001, 0.01, 0.1)
+K = 32
+THRESHOLD = 0.4
+
+
+def _corpus(n: int, m: int, dens: float, seed: int = 0):
+    from repro.data.sparse import sparse_clustered_corpus
+
+    avg = max(2.0, dens * m)
+    return sparse_clustered_corpus(n, m, avg, n_clusters=8, seed=seed)
+
+
+def _measure_density(sp, threshold: float, *, block: int, warmup: int, iters: int):
+    import numpy as np
+
+    from repro.core.pruning import (
+        block_prune_mask,
+        prune_stats,
+        sparse_block_prune_mask,
+    )
+    from repro.core.sparse import density, pad_rows_sparse, to_dense
+    from repro.kernels.apss_block.ops import apss_fused, apss_fused_compacted
+    from repro.kernels.apss_block.sparse import (
+        apss_sparse_compacted,
+        block_support_gather,
+    )
+
+    D = jax.block_until_ready(to_dense(sp))
+    spp, _ = pad_rows_sparse(sp, block)
+    d_stats = prune_stats(block_prune_mask(D, D, threshold, block))
+    s_stats = prune_stats(sparse_block_prune_mask(spp, spp, threshold, block))
+    _, bx = block_support_gather(spp, block)
+
+    fns = {
+        "dense-fused": jax.jit(
+            lambda d: apss_fused(d, d, threshold, K, block_m=block, block_n=block)
+        ),
+        "dense-compacted": lambda d: apss_fused_compacted(
+            d, threshold, K, block_m=block
+        ),
+    }
+    out = {
+        "density": density(sp),
+        "avg_nnz": float(np.asarray(sp.nnz).mean()),
+        "cap": sp.cap,
+        "support_width_S": int(bx.shape[-1]),
+        "live_tile_fraction_dense": float(d_stats.live_fraction),
+        "live_tile_fraction_sparse": float(s_stats.live_fraction),
+        "variants": {},
+    }
+    counts = {}
+    for name, fn in fns.items():
+        us, res = time_fn(fn, D, warmup=warmup, iters=iters, return_result=True)
+        out["variants"][name] = {"us_per_call": us}
+        counts[name] = int(np.asarray(res.counts).sum())
+    for name, kern in (("sparse-xla", False), ("sparse-kernel", True)):
+        fn = lambda s: apss_sparse_compacted(  # noqa: E731
+            s, threshold, K, block_m=block, use_kernel=kern
+        )
+        us, res = time_fn(fn, sp, warmup=warmup, iters=iters, return_result=True)
+        out["variants"][name] = {"us_per_call": us}
+        counts[name] = int(np.asarray(res.counts).sum())
+    assert len(set(counts.values())) == 1, counts  # exactness across variants
+    out["total_matches"] = counts["sparse-xla"]
+    return out
+
+
+def sweep(
+    n: int = 1024,
+    m: int = 8192,
+    densities=DENSITIES,
+    *,
+    threshold: float = THRESHOLD,
+    block: int = 256,
+    warmup: int = 1,
+    iters: int = 2,
+) -> dict:
+    while n % block:  # largest divisor of n not exceeding the request, so
+        block -= 1    # the dense comparators' tile asserts can't fire
+    out = {
+        "n": n, "m": m, "k": K, "threshold": threshold, "block": block,
+        "entries": [],
+    }
+    for dens in densities:
+        sp = _corpus(n, m, dens)
+        e = _measure_density(
+            sp, threshold, block=block, warmup=warmup, iters=iters
+        )
+        e["density_requested"] = dens
+        out["entries"].append(e)
+    return out
+
+
+def run(lines: list) -> None:
+    r = sweep(256, 2048, (0.01,), block=64, warmup=1, iters=2)
+    e = r["entries"][0]
+    for name, v in e["variants"].items():
+        lines.append(row(
+            f"sparse/{name}-d0.01-n256", v["us_per_call"],
+            f"live_sparse={e['live_tile_fraction_sparse']:.3f};"
+            f"S={e['support_width_S']};matches={e['total_matches']}",
+        ))

@@ -8,16 +8,22 @@ import jax
 import numpy as np
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (µs) of a jitted callable."""
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, return_result: bool = False):
+    """Median wall time (µs) of a jitted callable.
+
+    ``return_result=True`` returns ``(us, last_result)`` so callers needing
+    the output (e.g. exactness accounting) don't pay an extra untimed call.
+    """
+    res = None
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+        res = jax.block_until_ready(fn(*args))
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        res = jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)
+    us = float(np.median(times) * 1e6)
+    return (us, res) if return_result else us
 
 
 def bench_corpus(n: int = 1024, m: int = 768, density: float = 0.05, seed: int = 0):

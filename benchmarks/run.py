@@ -8,15 +8,19 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--only sequential,pruning,...]
-    PYTHONPATH=src python -m benchmarks.run --json [PATH] [--n 4096]
+    PYTHONPATH=src python -m benchmarks.run --json [PATH] [--n 4096] \
+        [--sweep-n 1024] [--sweep-m 8192]
 
-``--json`` runs the streaming-extraction comparison (dense-kernel vs fused
-vs fused-compacted) at ``--n`` and writes the result to PATH (default
-``BENCH_apss.json``) — the perf-trajectory artifact for the fused APSS
-path.
+``--json`` writes the perf-trajectory artifact (default ``BENCH_apss.json``):
+the streaming-extraction comparison (dense-kernel vs fused vs
+fused-compacted) at ``--n`` plus the sparse density sweep
+(``bench_sparse``: dense fused paths vs the inverted-index CSR paths at
+densities 0.1%/1%/10%), each entry carrying corpus density and live-tile
+fractions so the trajectory stays interpretable across workloads.
 """
 
 import argparse  # noqa: E402
+import json  # noqa: E402
 import sys  # noqa: E402
 import traceback  # noqa: E402
 
@@ -25,12 +29,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: sequential,pruning,blocksize,parallel,"
-                         "apss_stream,roofline")
+                         "apss_stream,sparse,roofline")
     ap.add_argument("--json", nargs="?", const="BENCH_apss.json", default=None,
                     metavar="PATH",
-                    help="write the streaming APSS comparison to PATH and exit")
+                    help="write the APSS perf artifact to PATH and exit")
     ap.add_argument("--n", type=int, default=4096,
-                    help="corpus rows for --json (default 4096)")
+                    help="corpus rows for the --json streaming comparison")
+    ap.add_argument("--sweep-n", type=int, default=1024,
+                    help="corpus rows for the --json sparse density sweep")
+    ap.add_argument("--sweep-m", type=int, default=8192,
+                    help="corpus dims for the --json sparse density sweep")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -39,17 +47,36 @@ def main() -> None:
         bench_parallel,
         bench_pruning,
         bench_sequential,
+        bench_sparse,
         roofline,
     )
 
     if args.json:
-        r = bench_apss_stream.write_json(args.json, n=args.n)
+        def persist(r):
+            with open(args.json, "w") as f:
+                json.dump(r, f, indent=2)
+                f.write("\n")
+
+        r = bench_apss_stream.measure(n=args.n)
+        persist(r)  # minutes of streaming data survive a sweep failure
         for name, v in r["variants"].items():
             print(f"{name}: {v['us_per_call']:.0f} us")
         print(
             f"live tiles {r['live_tiles']}/{r['total_tiles']} "
-            f"({r['live_tile_fraction']:.3f}) -> {args.json}"
+            f"({r['live_tile_fraction']:.3f})"
         )
+        block = min(256, max(64, args.sweep_n // 4))
+        r["sparse_sweep"] = bench_sparse.sweep(
+            args.sweep_n, args.sweep_m, block=block
+        )
+        for e in r["sparse_sweep"]["entries"]:
+            times = {
+                k: f"{v['us_per_call']:.0f}us"
+                for k, v in e["variants"].items()
+            }
+            print(f"density={e['density']:.4f}: {times}")
+        persist(r)
+        print(f"-> {args.json}")
         return
 
     suites = {
@@ -58,6 +85,7 @@ def main() -> None:
         "blocksize": bench_blocksize.run,      # paper Tables 7-8 / Fig 8
         "parallel": bench_parallel.run,        # paper Figs 3-6
         "apss_stream": bench_apss_stream.run,  # streaming fused extraction
+        "sparse": bench_sparse.run,            # sparse vs dense density sweep
         "roofline": roofline.run,              # EXPERIMENTS.md §Roofline
     }
     selected = args.only.split(",") if args.only else list(suites)

@@ -33,15 +33,26 @@ def make_mesh(
     our meshes are Auto-typed, so on old versions the plain call is
     equivalent.
     """
+    shapes = tuple(axis_shapes)
+    names = tuple(axis_names)
+    mk = getattr(jax, "make_mesh", None)
+    if mk is None:  # pre-0.4.35: build the Mesh directly
+        import numpy as np
+
+        if devices is None:
+            from jax.experimental import mesh_utils
+
+            devices = mesh_utils.create_device_mesh(shapes)
+        return jax.sharding.Mesh(np.asarray(devices).reshape(shapes), names)
     kwargs = {}
     if devices is not None:
         kwargs["devices"] = devices
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None and (
-        "axis_types" in inspect.signature(jax.make_mesh).parameters
+        "axis_types" in inspect.signature(mk).parameters
     ):
-        kwargs["axis_types"] = (axis_type.Auto,) * len(tuple(axis_names))
-    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+        kwargs["axis_types"] = (axis_type.Auto,) * len(names)
+    return mk(shapes, names, **kwargs)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

@@ -4,7 +4,9 @@ Layout:
 
 - :mod:`repro.core.apss`        single-device APSS (reference oracle + blocked)
 - :mod:`repro.core.matches`     fixed-capacity match extraction / merging
-- :mod:`repro.core.pruning`     maxweight / minsize block bounds, local pruning
+- :mod:`repro.core.pruning`     maxweight / minsize block bounds, local pruning,
+                                sparse-exact bounds + inverted-index candidacy
+- :mod:`repro.core.sparse`      padded-CSR SparseCorpus + sparse scoring
 - :mod:`repro.core.distributed` 1-D horizontal, 1-D vertical, 2-D shard_map
                                 algorithms (paper Algs. 3-7) + TPU extensions
 - :mod:`repro.core.graph`       similarity-graph (COO) construction utilities
@@ -22,6 +24,15 @@ from repro.core.pruning import (  # noqa: F401
     block_minsize_bounds,
     block_prune_mask,
     local_threshold,
+    sparse_block_prune_mask,
+    sparse_candidate_mask,
+)
+from repro.core.sparse import (  # noqa: F401
+    SparseCorpus,
+    from_dense,
+    normalize_sparse,
+    sparse_similarity_topk,
+    to_dense,
 )
 from repro.core.distributed import (  # noqa: F401
     apss_horizontal,

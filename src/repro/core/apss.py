@@ -22,7 +22,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.matches import Matches, extract_matches, merge_matches
-from repro.core.pruning import block_prune_mask, prune_stats, PruneStats
+from repro.core.pruning import (
+    PruneStats,
+    block_prune_mask,
+    prune_stats,
+    sparse_block_prune_mask,
+)
+from repro.core.sparse import (
+    SparseCorpus,
+    pad_rows_sparse,
+    sparse_similarity_topk,
+)
 
 
 def normalize_rows(D: jax.Array, eps: float = 1e-12) -> jax.Array:
@@ -85,6 +95,25 @@ def similarity_topk(
     supported by the kernel (only contiguous-prefix validity, which the
     kernel derives from the unpadded corpus length).
     """
+    if isinstance(Q, SparseCorpus) != isinstance(C, SparseCorpus):
+        raise ValueError(
+            "Q and C must use the same representation "
+            "(both SparseCorpus or both dense arrays)"
+        )
+    if isinstance(Q, SparseCorpus):
+        if use_kernel:
+            raise ValueError(
+                "sparse use_kernel is self-join only: call apss_blocked on a "
+                "SparseCorpus (kernels.apss_block.sparse.apss_sparse_compacted)"
+            )
+        if col_valid is not None:
+            raise ValueError("sparse similarity_topk derives col validity "
+                             "from the unpadded corpus length")
+        return sparse_similarity_topk(
+            Q, C, threshold, k, block_rows=block_rows,
+            exclude_self=exclude_self,
+            row_offset=row_offset, col_offset=col_offset,
+        )
     if use_kernel:
         if col_valid is not None:
             raise ValueError("use_kernel=True does not support col_valid")
@@ -145,7 +174,18 @@ def apss_blocked(
     on CPU). The XLA path computes every tile and uses the mask for
     accounting only. Exactness is independent of the mask; see
     ``core.pruning``.
+
+    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus`: the self-join
+    then takes the sparse path — inverted-index worklist + CSR tile
+    scoring (``use_kernel=True``; host-compacted, so not traceable) or the
+    blocked gather-dot join (``use_kernel=False``, fully traceable). Both
+    are exact on the densified corpus; see DESIGN.md §5.
     """
+    if isinstance(D, SparseCorpus):
+        return _apss_blocked_sparse(
+            D, threshold, k, block_rows=block_rows,
+            with_prune_stats=with_prune_stats, use_kernel=use_kernel,
+        )
     if use_kernel:
         from repro.kernels.apss_block.ops import apss_fused
 
@@ -162,6 +202,36 @@ def apss_blocked(
         return m
     Dp, _ = pad_rows(D, block_rows)
     mask = block_prune_mask(Dp, Dp, threshold, block_rows)
+    return m, prune_stats(mask)
+
+
+def _apss_blocked_sparse(
+    D: SparseCorpus,
+    threshold: float,
+    k: int,
+    *,
+    block_rows: int,
+    with_prune_stats: bool,
+    use_kernel: bool,
+) -> Matches | tuple[Matches, PruneStats]:
+    mask = None
+    bs = _kernel_tile(block_rows) if use_kernel else block_rows
+    if with_prune_stats or use_kernel:
+        Dp, _ = pad_rows_sparse(D, bs)
+        mask = sparse_block_prune_mask(Dp, Dp, threshold, bs)
+    if use_kernel:
+        from repro.kernels.apss_block.sparse import apss_sparse_compacted
+
+        m = apss_sparse_compacted(
+            D, float(threshold), k,
+            block_m=bs, block_mask=mask, use_kernel=True,
+        )
+    else:
+        m = sparse_similarity_topk(
+            D, D, threshold, k, block_rows=block_rows, exclude_self=True
+        )
+    if not with_prune_stats:
+        return m
     return m, prune_stats(mask)
 
 

@@ -58,6 +58,13 @@ from repro.core.matches import (
     merge_matches,
 )
 from repro.core.pruning import local_threshold
+from repro.core.sparse import (
+    SparseCorpus,
+    densify_rows,
+    gather_dot,
+    shard_dims,
+    sparse_similarity_topk,
+)
 
 
 class ApssStats(NamedTuple):
@@ -129,7 +136,18 @@ def apss_horizontal(
     fused streaming Pallas kernel (``O(rows·k)`` output, VMEM-resident score
     tiles) instead of the XLA einsum + ``extract_matches`` pair — the ring
     step's dynamic column offset feeds the kernel directly.
+
+    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus` (allgather and
+    ring schedules): the CSR triple shards/travels instead of dense rows —
+    collective volume drops from ``O(n_loc · m)`` to ``O(n_loc · cap)``
+    per hop, a factor ``≈ 1/density`` — and every block pair is scored with
+    the gather-dot sparse tile primitive.
     """
+    if isinstance(D, SparseCorpus):
+        return _apss_horizontal_sparse(
+            D, threshold, k, mesh, axis_name,
+            schedule=schedule, block_rows=block_rows, use_kernel=use_kernel,
+        )
     if isinstance(axis_name, (tuple, list)):
         axis_name = tuple(axis_name)
         p = 1
@@ -274,7 +292,7 @@ def _horizontal_halfring(
     if p == 1:
         return matches
 
-    def cross_tile(buf, s):
+    def cross_tile(buf, s, need_bwd=True):
         src = jnp.mod(me - s, p)  # owner of `buf`
         col_off = src * n_loc
         if use_kernel:
@@ -283,6 +301,12 @@ def _horizontal_halfring(
                 exclude_self=True, row_offset=row_off, col_offset=col_off,
                 use_kernel=True,
             )
+            if not need_bwd:
+                # The kernel path's backward orientation is a second full
+                # fused join, not a cheap transposed extraction — skip it
+                # deterministically when the caller discards it (even-p
+                # final step) instead of hoping XLA DCEs a custom-call.
+                return fwd, None
             bwd = similarity_topk(
                 buf, D_loc, threshold, k, block_rows=bs,
                 exclude_self=True, row_offset=col_off, col_offset=row_off,
@@ -324,7 +348,7 @@ def _horizontal_halfring(
     else:
         buf = hop(buf)
         caravan = jax.tree.map(hop, caravan)
-        fwd, _ = cross_tile(buf, jnp.int32(half))
+        fwd, _ = cross_tile(buf, jnp.int32(half), need_bwd=False)
         matches = merge_matches(matches, fwd)
     # Send the caravan home: its rows belong to device (me - half).
     home = jax.tree.map(
@@ -340,6 +364,105 @@ def _empty_local_matches(rows: int, k: int) -> Matches:
         indices=jnp.full((rows, k), -1, jnp.int32),
         counts=jnp.zeros((rows,), jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# 1-D horizontal, sparse corpora: the CSR triple shards/travels
+# ---------------------------------------------------------------------------
+
+
+def _apss_horizontal_sparse(
+    D: SparseCorpus, threshold, k, mesh, axis_name, *,
+    schedule, block_rows, use_kernel,
+):
+    if use_kernel:
+        raise ValueError(
+            "sparse use_kernel is the self-join worklist path "
+            "(kernels.apss_block.sparse); distributed sparse schedules "
+            "score with the XLA gather-dot primitive"
+        )
+    if isinstance(axis_name, (tuple, list)):
+        raise ValueError("sparse horizontal needs a single axis name")
+    p = mesh.shape[axis_name]
+    if schedule == "allgather":
+        body = functools.partial(
+            _sparse_horizontal_allgather, m=D.m, threshold=threshold, k=k,
+            axis_name=axis_name, block_rows=block_rows,
+        )
+    elif schedule == "ring":
+        body = functools.partial(
+            _sparse_horizontal_ring, m=D.m, threshold=threshold, k=k,
+            axis_name=axis_name, p=p, block_rows=block_rows,
+        )
+    else:
+        raise ValueError(
+            f"sparse horizontal supports allgather|ring, got: {schedule}"
+        )
+    # The VMA checker has no rule for the scatter/gather ops inside the
+    # sparse tile primitive on some JAX versions; verified numerically.
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None), P(axis_name, None), P(axis_name)),
+        out_specs=_matches_specs(axis_name),
+        check_vma=False,
+    )(D.indices, D.values, D.nnz)
+
+
+def _sparse_horizontal_allgather(
+    idx, val, nnz, *, m, threshold, k, axis_name, block_rows
+):
+    """Paper-faithful Alg. 6 on CSR: all-gather the (small) CSR triple."""
+    n_loc = idx.shape[0]
+    me = _flat_axis_index(axis_name)
+
+    def g(x):
+        return lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+    return sparse_similarity_topk(
+        SparseCorpus(idx, val, nnz, m),
+        SparseCorpus(g(idx), g(val), g(nnz), m),
+        threshold,
+        k,
+        block_rows=min(block_rows, n_loc),
+        exclude_self=True,
+        row_offset=me * n_loc,
+        vary_axes=(axis_name,),
+    )
+
+
+def _sparse_horizontal_ring(
+    idx, val, nnz, *, m, threshold, k, axis_name, p, block_rows
+):
+    """Ring schedule on CSR: the traveling block is the CSR triple, so each
+    hop moves ``O(n_loc · cap)`` words instead of ``O(n_loc · m)``."""
+    n_loc = idx.shape[0]
+    me = lax.axis_index(axis_name)
+    row_off = me * n_loc
+    bs = min(block_rows, n_loc)
+    loc = SparseCorpus(idx, val, nnz, m)
+
+    def compute(buf, s, matches):
+        src = jnp.mod(me - s, p)
+        m_new = sparse_similarity_topk(
+            loc, SparseCorpus(*buf, m), threshold, k,
+            block_rows=bs, exclude_self=True,
+            row_offset=row_off, col_offset=src * n_loc,
+            vary_axes=(axis_name,),
+        )
+        return merge_matches(matches, m_new)
+
+    def step(s, carry):
+        buf, matches = carry
+        nxt = jax.tree.map(
+            lambda x: lax.ppermute(x, axis_name, perm=_ring_perm(p)), buf
+        )
+        matches = compute(buf, s, matches)
+        return nxt, matches
+
+    matches0 = _pvary(_empty_local_matches(n_loc, k), axis_name)
+    buf, matches = lax.fori_loop(0, p - 1, step, ((idx, val, nnz), matches0))
+    return compute(buf, p - 1, matches)
 
 
 # ---------------------------------------------------------------------------
@@ -364,73 +487,116 @@ def apss_vertical(
     ``D (n, m)`` global; columns sharded over ``axis_name``; every device sees
     all rows in an ``m/p`` dimension slice and computes *partial* scores which
     are then accumulated (paper's score-accumulation phase).
+
+    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus`: dimension
+    sharding then splits the **inverted index** — each device owns a
+    contiguous slice of posting lists (host-side ``shard_dims``, so the
+    sparse entry is not traceable) and computes partials with the sparse
+    gather-dot primitive. All four accumulations apply unchanged: they
+    only ever see the ``(block, n)`` partial-score tiles.
+    """
+    if isinstance(D, SparseCorpus):
+        return _apss_vertical_sparse(
+            D, threshold, k, mesh, axis_name,
+            accumulation=accumulation, block_rows=block_rows,
+            candidate_capacity=candidate_capacity, return_stats=return_stats,
+        )
+    n = D.shape[0]
+
+    def make_partials(D_loc):
+        return functools.partial(_partial_scores, D_loc, block_rows=block_rows)
+
+    return _vertical_dispatch(
+        D, make_partials, n, threshold, k, mesh, axis_name,
+        accumulation=accumulation, block_rows=block_rows,
+        candidate_capacity=candidate_capacity, return_stats=return_stats,
+        in_specs=P(None, axis_name), strict_vma=True,
+    )
+
+
+def _vertical_dispatch(
+    args, make_partials, n, threshold, k, mesh, axis_name, *,
+    accumulation, block_rows, candidate_capacity, return_stats, in_specs,
+    strict_vma,
+):
+    """Shared accumulation dispatch for dense and sparse vertical inputs.
+
+    ``make_partials(*local_args) -> (blk -> (block_rows, n) partials)``
+    builds the per-device partial-score closure; everything downstream
+    (Lemma-1 compaction, flat/recursive accumulation) is representation-
+    agnostic.
     """
     p = mesh.shape[axis_name]
     C = candidate_capacity or max(4 * k, 32)
-    n = D.shape[0]
-    nb = -(-n // block_rows)
     if n % block_rows != 0:
         raise ValueError(f"n={n} must be a multiple of block_rows={block_rows}")
+    args = args if isinstance(args, tuple) else (args,)
 
     if accumulation == "allreduce":
-        fn = functools.partial(
-            _vertical_allreduce, threshold=threshold, k=k,
-            axis_name=axis_name, block_rows=block_rows,
-        )
+        def fn(*local):
+            return _vertical_allreduce(
+                make_partials(*local), n, threshold=threshold, k=k,
+                axis_name=axis_name, block_rows=block_rows,
+            )
         out = shard_map(
-            fn, mesh=mesh, in_specs=P(None, axis_name),
+            fn, mesh=mesh, in_specs=in_specs,
             out_specs=Matches(values=P(), indices=P(), counts=P()),
-        )(D)
+            check_vma=strict_vma,
+        )(*args)
         stats = ApssStats(overflow_rows=jnp.int32(0))
     elif accumulation == "scatter":
         if block_rows % p != 0:
             raise ValueError("scatter accumulation needs block_rows % p == 0")
-        fn = functools.partial(
-            _vertical_scatter, threshold=threshold, k=k,
-            axis_name=axis_name, p=p, block_rows=block_rows,
-        )
+        def fn(*local):
+            return _vertical_scatter(
+                make_partials(*local), n, threshold=threshold, k=k,
+                axis_name=axis_name, p=p, block_rows=block_rows,
+            )
         stacked = shard_map(
-            fn, mesh=mesh, in_specs=P(None, axis_name),
+            fn, mesh=mesh, in_specs=in_specs,
             out_specs=Matches(
                 values=P(None, axis_name, None),
                 indices=P(None, axis_name, None),
                 counts=P(None, axis_name),
             ),
-        )(D)
+            check_vma=strict_vma,
+        )(*args)
         out = jax.tree.map(lambda x: x.reshape(n, *x.shape[2:]), stacked)
         stats = ApssStats(overflow_rows=jnp.int32(0))
     elif accumulation == "compressed":
-        fn = functools.partial(
-            _vertical_compressed, threshold=threshold, k=k,
-            axis_name=axis_name, p=p, block_rows=block_rows, capacity=C,
-        )
+        def fn(*local):
+            return _vertical_compressed(
+                make_partials(*local), n, threshold=threshold, k=k,
+                axis_name=axis_name, p=p, block_rows=block_rows, capacity=C,
+            )
         # NOTE: outputs are value-replicated (all devices compute the same
         # candidate union and psum-accumulated scores) but the static VMA
         # checker cannot see through all_gather-derived indexing; verified
         # numerically by tests instead.
         out, stats = shard_map(
-            fn, mesh=mesh, in_specs=P(None, axis_name),
+            fn, mesh=mesh, in_specs=in_specs,
             out_specs=(
                 Matches(values=P(), indices=P(), counts=P()),
                 ApssStats(overflow_rows=P()),
             ),
             check_vma=False,
-        )(D)
+        )(*args)
     elif accumulation == "recursive":
         if p & (p - 1):
             raise ValueError("recursive accumulation needs power-of-two shards")
-        fn = functools.partial(
-            _vertical_recursive, threshold=threshold, k=k,
-            axis_name=axis_name, p=p, block_rows=block_rows, capacity=C,
-        )
+        def fn(*local):
+            return _vertical_recursive(
+                make_partials(*local), n, threshold=threshold, k=k,
+                axis_name=axis_name, p=p, block_rows=block_rows, capacity=C,
+            )
         out, stats = shard_map(
-            fn, mesh=mesh, in_specs=P(None, axis_name),
+            fn, mesh=mesh, in_specs=in_specs,
             out_specs=(
                 Matches(values=P(), indices=P(), counts=P()),
                 ApssStats(overflow_rows=P()),
             ),
             check_vma=False,
-        )(D)
+        )(*args)
     else:
         raise ValueError(f"unknown vertical accumulation: {accumulation}")
 
@@ -439,19 +605,58 @@ def apss_vertical(
     return out
 
 
+def _apss_vertical_sparse(
+    D: SparseCorpus, threshold, k, mesh, axis_name, *,
+    accumulation, block_rows, candidate_capacity, return_stats,
+):
+    p = mesh.shape[axis_name]
+    n = D.n
+    idx_s, val_s, nnz_s, m_loc = shard_dims(D, p)  # host split: not traceable
+    del nnz_s  # scoring needs only the 0-padded (idx, val) slots
+    ncb = n // block_rows  # divisibility validated by _vertical_dispatch
+    cap_loc = idx_s.shape[-1]
+
+    def make_partials(idxL, valL):
+        idxL, valL = idxL[0], valL[0]  # shard dim (1, n, cap_loc) → local
+        sp_loc = SparseCorpus(idxL, valL, jnp.zeros((n,), jnp.int32), m_loc)
+        Ci = idxL.reshape(ncb, block_rows, cap_loc)
+        Cv = valL.reshape(ncb, block_rows, cap_loc)
+
+        def partials(blk):
+            qd = densify_rows(sp_loc, blk * block_rows, block_rows)
+
+            def chunk(_, ci):
+                return _, gather_dot(qd, Ci[ci], Cv[ci])
+
+            _, ss = lax.scan(chunk, 0, jnp.arange(ncb))  # (ncb, b, block)
+            return jnp.moveaxis(ss, 0, 1).reshape(block_rows, n)
+
+        return partials
+
+    return _vertical_dispatch(
+        (jnp.asarray(idx_s), jnp.asarray(val_s)), make_partials, n,
+        threshold, k, mesh, axis_name,
+        accumulation=accumulation, block_rows=block_rows,
+        candidate_capacity=candidate_capacity, return_stats=return_stats,
+        in_specs=(P(axis_name, None, None), P(axis_name, None, None)),
+        # The VMA checker has no rule for the scatter/gather ops inside the
+        # sparse partial-score primitive; verified numerically by tests.
+        strict_vma=False,
+    )
+
+
 def _partial_scores(D_loc, blk, block_rows):
     """Partial similarity of one query row block in the local dim slice."""
     q = lax.dynamic_slice_in_dim(D_loc, blk * block_rows, block_rows, axis=0)
     return jnp.einsum("im,jm->ij", q, D_loc, preferred_element_type=jnp.float32)
 
 
-def _vertical_allreduce(D_loc, *, threshold, k, axis_name, block_rows):
+def _vertical_allreduce(partials_fn, n, *, threshold, k, axis_name, block_rows):
     """vertical-noopt: all-reduce the full dense score block (paper baseline)."""
-    n = D_loc.shape[0]
     nb = n // block_rows
 
     def body(_, blk):
-        A = _partial_scores(D_loc, blk, block_rows)
+        A = partials_fn(blk)
         S = lax.psum(A, axis_name)
         m = extract_matches(
             S, threshold, k, row_offset=blk * block_rows, exclude_self=True
@@ -462,15 +667,14 @@ def _vertical_allreduce(D_loc, *, threshold, k, axis_name, block_rows):
     return jax.tree.map(lambda x: x.reshape(n, *x.shape[2:]), ms)
 
 
-def _vertical_scatter(D_loc, *, threshold, k, axis_name, p, block_rows):
+def _vertical_scatter(partials_fn, n, *, threshold, k, axis_name, p, block_rows):
     """Paper §5.1.7 flat accumulation: scores reduced AND partitioned."""
-    n = D_loc.shape[0]
     nb = n // block_rows
     rows_per_dev = block_rows // p
     me = lax.axis_index(axis_name)
 
     def body(_, blk):
-        A = _partial_scores(D_loc, blk, block_rows)  # (b, n)
+        A = partials_fn(blk)  # (b, n)
         S_slice = lax.psum_scatter(A, axis_name, scatter_dimension=0, tiled=True)
         m = extract_matches(
             S_slice, threshold, k,
@@ -495,7 +699,7 @@ def _local_candidates(A, t_local, capacity):
 
 
 def _vertical_compressed(
-    D_loc, *, threshold, k, axis_name, p, block_rows, capacity
+    partials_fn, n, *, threshold, k, axis_name, p, block_rows, capacity
 ):
     """Local pruning (Lemma 1) + candidate compaction (paper §5.1.3-5.1.4).
 
@@ -505,12 +709,11 @@ def _vertical_compressed(
     exactly at ``t``. Matches paper's two-step accumulate: candidate-set
     union (Reduce-All ∪) then parallel score addition.
     """
-    n = D_loc.shape[0]
     nb = n // block_rows
     t_local = local_threshold(threshold, p)
 
     def body(carry, blk):
-        A = _partial_scores(D_loc, blk, block_rows)  # (b, n) partials
+        A = partials_fn(blk)  # (b, n) partials
         c_val, c_idx, overflow = _local_candidates(A, t_local, capacity)
         # Union of candidate ids across dimension shards (small all-gather).
         all_idx = lax.all_gather(c_idx, axis_name, axis=1, tiled=True)  # (b, p*C)
@@ -575,7 +778,7 @@ def _pairwise_merge_candidates(idx_a, val_a, ub_a, idx_b, val_b, ub_b, capacity)
 
 
 def _vertical_recursive(
-    D_loc, *, threshold, k, axis_name, p, block_rows, capacity
+    partials_fn, n, *, threshold, k, axis_name, p, block_rows, capacity
 ):
     """Recursive local pruning on a hypercube (paper §5.1.5-5.1.6, Alg. 5).
 
@@ -587,7 +790,6 @@ def _vertical_recursive(
     paper's "completing partial scores" problem solved bound-side. A final
     psum over the (replicated) top-level candidate set yields exact scores.
     """
-    n = D_loc.shape[0]
     nb = n // block_rows
     t = jnp.float32(threshold)
     t_leaf = local_threshold(threshold, p)
@@ -595,7 +797,7 @@ def _vertical_recursive(
     levels = p.bit_length() - 1
 
     def body(carry, blk):
-        A = _partial_scores(D_loc, blk, block_rows)
+        A = partials_fn(blk)
         c_val, c_idx, overflow = _local_candidates(A, t_leaf, capacity)
         c_ub = jnp.where(c_idx >= 0, c_val, NEG_INF)
 
@@ -670,6 +872,11 @@ def apss_2d(
     re-use of the vertical algorithm with the row communicator, verbatim in
     mesh-axis form.
     """
+    if isinstance(D, SparseCorpus):
+        raise NotImplementedError(
+            "sparse 2-D distribution is an open item (see ROADMAP.md); use "
+            "distribution='horizontal' or 'vertical' for SparseCorpus inputs"
+        )
     q = mesh.shape[row_axis]
     r = mesh.shape[col_axis]
     C = candidate_capacity or max(4 * k, 32)
@@ -806,6 +1013,10 @@ def apss_horizontal_hierarchical(
     with it), which replaces all modular-offset bookkeeping: the column
     offset of the current block is simply ``owner · n_loc``.
     """
+    if isinstance(D, SparseCorpus):
+        raise NotImplementedError(
+            "sparse hierarchical schedule is an open item (see ROADMAP.md)"
+        )
     axes = tuple(axes)
     sizes = [mesh.shape[a] for a in axes]
 

@@ -15,6 +15,13 @@ Local pruning (paper Lemma 1): if ``sim(x, y) ≥ t`` then at least one of the
 ``p`` dimension-shards sees a partial score ``≥ t/p``. :func:`local_threshold`
 is that bound; the vertical distributed algorithm uses it to compact partial
 scores before accumulation.
+
+For CSR corpora (``core.sparse``) the same bounds are computed straight from
+the sparse layout (:func:`sparse_block_prune_mask`): block maxima by
+scatter-max, per-row sizes from the stored ``nnz`` (exact, not a densified
+recount), plus the inverted-index candidacy test — tiles whose blocks share
+no dimension support are never candidates at all (the paper's partial
+indexing, DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -122,6 +129,117 @@ def prune_stats(mask: jax.Array) -> PruneStats:
         total_blocks=total,
         live_fraction=live.astype(jnp.float32) / total.astype(jnp.float32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Sparse-exact bounds: inverted-index candidate generation + tile bounds
+# computed straight from the padded-CSR corpus (core.sparse.SparseCorpus),
+# never from a densified array.
+# ---------------------------------------------------------------------------
+
+
+def sparse_block_maxweight(sp, block_rows: int) -> jax.Array:
+    """Per-block per-dimension max weight ``(n/b, m)`` from CSR, by scatter-max.
+
+    The exact analogue of :func:`block_maxweight_bounds` without
+    densification. Duplicate coordinates are combined first
+    (``core.sparse.dedupe_rows``) so the bound sees the effective
+    per-component magnitude ``|Σ slots|``, not per-slot values — a per-slot
+    max would UNDER-bound concentrated duplicates and unsoundly prune.
+    Padding slots carry ``(index 0, value 0)`` and are inert under
+    max-with-0.
+    """
+    from repro.core.sparse import dedupe_rows
+
+    n = sp.n
+    assert n % block_rows == 0, (n, block_rows)
+    idx, comp = dedupe_rows(sp.indices, sp.values)
+    blk = (jnp.arange(n, dtype=jnp.int32) // block_rows)[:, None]
+    out = jnp.zeros((n // block_rows, sp.m), jnp.float32)
+    return out.at[blk, idx].max(jnp.abs(comp))
+
+
+def sparse_block_support(sp, block_rows: int) -> jax.Array:
+    """Tile-granular posting lists: ``sup[B, d]`` ⇔ dimension ``d``'s posting
+    list intersects row block ``B`` (the paper's inverted index ``I_d``,
+    quantized to blocks)."""
+    return sparse_block_maxweight(sp, block_rows) > 0
+
+
+def sparse_candidate_mask(sup_rows: jax.Array, sup_cols: jax.Array) -> jax.Array:
+    """Inverted-index candidate generation at tile granularity.
+
+    A tile ``(I, J)`` is a candidate iff some dimension's posting list hits
+    both blocks — the paper's partial indexing: pairs sharing no indexed
+    dimension are never generated at all. One boolean-as-f32 matmul over the
+    block-support summaries; everything else is provably zero-similarity.
+
+    Inside :func:`sparse_block_prune_mask` this test is enforced through the
+    weighted maxweight bound instead (no-shared-support ⇒ ``ub = 0 < t`` for
+    any ``t > 0``), which also stays sound at ``t ≤ 0`` where zero-similarity
+    pairs DO match; this boolean form exists for index statistics and
+    candidate accounting.
+    """
+    hits = jnp.einsum(
+        "im,jm->ij",
+        sup_rows.astype(jnp.float32),
+        sup_cols.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return hits > 0
+
+
+def sparse_block_prune_mask(
+    sp_rows,
+    sp_cols,
+    threshold: jax.Array | float,
+    block_rows: int,
+    block_cols: int | None = None,
+    *,
+    use_minsize: bool = True,
+    normalized: bool = True,
+) -> jax.Array:
+    """``(n_row_blocks, n_col_blocks)`` LIVE mask from CSR inputs only.
+
+    Conjunction of two exact certificates (False ⇒ no pair in the tile
+    reaches ``t``; pruned execution stays exact):
+
+    1. the maxweight upper bound ``Σ_d maxw_I[d]·maxw_J[d] ≥ t`` over
+       sparse block maxima — which IS the inverted-index candidacy test in
+       weighted form: blocks sharing no posting list have ``ub = 0`` and
+       die for any ``t > 0`` (identical bound to the dense path, no
+       densification),
+    2. the minsize bound ``maxweight(I) · √(max nnz in J) ≥ t`` using the
+       corpus's EXACT stored per-row nnz — the dense path has to recount
+       nonzeros from a densified array; here ``|y|`` is native. Stored nnz
+       over-counts duplicate coordinates, which only loosens (never
+       unsounds) the bound. Like its dense twin, the minsize bound assumes
+       unit row norms and is gated on ``normalized`` (pass False for
+       unnormalized corpora). A symmetrized self-join worklist
+       (``live | live.T``, as built by ``apss_sparse_compacted``) is
+       additionally sound for any ``t < 1`` even unnormalized: both
+       orientations failing implies ``sim ≤ mw_I·√|J| · mw_J·√|I| < t² <
+       t``.
+
+    Both certificates are trivially live at ``t ≤ 0`` (their left sides are
+    ≥ 0), where every pair — including zero-similarity ones — matches.
+    """
+    block_cols = block_cols or block_rows
+    t = jnp.asarray(threshold, jnp.float32)
+    maxw_r = sparse_block_maxweight(sp_rows, block_rows)
+    maxw_c = (
+        maxw_r  # self-join: skip the second dedupe + scatter-max pass
+        if sp_cols is sp_rows and block_cols == block_rows
+        else sparse_block_maxweight(sp_cols, block_cols)
+    )
+    live = block_upper_bounds(maxw_r, maxw_c) >= t
+    if use_minsize and normalized:
+        mw_r = jnp.max(maxw_r, axis=1)
+        max_nnz_c = jnp.max(
+            sp_cols.nnz.reshape(-1, block_cols), axis=1
+        ).astype(jnp.float32)
+        live &= mw_r[:, None] * jnp.sqrt(max_nnz_c)[None, :] >= t
+    return live
 
 
 def local_threshold(threshold: float | jax.Array, num_shards: int) -> jax.Array:

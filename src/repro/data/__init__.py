@@ -4,6 +4,10 @@ from repro.data.synthetic import (  # noqa: F401
     PAPER_DATASETS,
     paper_like_corpus,
 )
+from repro.data.sparse import (  # noqa: F401
+    sparse_clustered_corpus,
+    sparse_zipfian_corpus,
+)
 from repro.data.pipeline import (  # noqa: F401
     LMDataPipeline,
     RecsysPipeline,

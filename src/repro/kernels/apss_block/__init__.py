@@ -4,3 +4,4 @@ from repro.kernels.apss_block.ops import (  # noqa: F401
     apss_fused_compacted,
 )
 from repro.kernels.apss_block.ref import apss_block_reference  # noqa: F401
+from repro.kernels.apss_block.sparse import apss_sparse_compacted  # noqa: F401

@@ -86,6 +86,85 @@ def _empty_buffers(bm: int, k: int):
     )
 
 
+def _topk_sort(topv, topi, cand_v, cand_i, k: int):
+    """``_merge_topk`` contract implemented with ``lax.top_k``.
+
+    Exact same result (k best of the union, NEG_LARGE/-1 empties); for XLA
+    consumers only — ``lax.top_k`` does not lower on Mosaic, which is why
+    the kernels use the iterative ``_merge_topk`` instead.
+    """
+    allv = jnp.concatenate([topv, cand_v], axis=1)
+    alli = jnp.concatenate([topi, cand_i], axis=1)
+    kk = min(k, allv.shape[1])
+    v, sel = jax.lax.top_k(allv, kk)
+    i = jnp.take_along_axis(alli, sel, axis=1)
+    valid = v > _VALID
+    v = jnp.where(valid, v, NEG_LARGE)
+    i = jnp.where(valid, i, -1)
+    kb = topv.shape[1]
+    if kk < kb:
+        v = jnp.pad(v, ((0, 0), (0, kb - kk)), constant_values=NEG_LARGE)
+        i = jnp.pad(i, ((0, 0), (0, kb - kk)), constant_values=-1)
+    return v, i
+
+
+def _tile_packets(
+    s, ib, jb, *, threshold: float, k: int, block_m: int, block_n: int,
+    n_valid: int, topk=_merge_topk,
+):
+    """One self-join tile's forward + mirror candidate packets (pure).
+
+    THE single implementation of the exactness-critical packet convention —
+    mirror candidate ids are ``grow.T``, NOT ``gcol.T`` (``gcol.T`` holds
+    the mirrored row's own id); diagonal tiles emit an empty mirror (a copy
+    would double-count). Shared verbatim by the dense worklist kernel
+    (``_tile_cand_kernel``), the sparse CSR tile kernel, and the sparse XLA
+    worklist scan (``kernels.apss_block.sparse``), so the Pallas and XLA
+    paths cannot diverge. Only the top-k *selection primitive* is
+    pluggable (``topk``): the default ``_merge_topk`` lowers on Mosaic,
+    while XLA consumers pass :func:`_topk_sort` (same contract, faster
+    under XLA) — the masking/id/mirror convention is not.
+
+    Diagonal tiles compute and then discard the mirror selection
+    (``jnp.where(diag, ...)``) — ~``k·bn·(k+bm)`` VPU ops, « the tile's
+    MXU matmul — the deliberate price of keeping this branch-free and
+    usable from both Pallas and XLA.
+
+    Returns ``(fv, fi, fc, bv, bi, bc)`` with counts shaped ``(block, 1)``.
+    """
+    grow = ib * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    gcol = jb * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = (
+        (s >= jnp.float32(threshold))
+        & (grow != gcol)
+        & (grow < n_valid)
+        & (gcol < n_valid)
+    )
+    empty_v, empty_i = _empty_buffers(block_m, k)
+    fv, fi = topk(
+        empty_v, empty_i,
+        jnp.where(ok, s, NEG_LARGE), jnp.where(ok, gcol, -1), k,
+    )
+    fc = jnp.sum(ok, axis=1, keepdims=True, dtype=jnp.int32)
+
+    # S = Sᵀ: the same tile scores the mirrored pairs — rows become the
+    # y-block's vectors, candidate ids the x-block's.
+    diag = ib == jb
+    ev, ei = _empty_buffers(block_n, k)
+    mv, mi = topk(
+        ev, ei,
+        jnp.where(ok.T, s.T, NEG_LARGE), jnp.where(ok.T, grow.T, -1), k,
+    )
+    bv = jnp.where(diag, ev, mv)
+    bi = jnp.where(diag, ei, mi)
+    bc = jnp.where(
+        diag,
+        jnp.int32(0),
+        jnp.sum(ok.T, axis=1, keepdims=True, dtype=jnp.int32),
+    )
+    return fv, fi, fc, bv, bi, bc
+
+
 # ---------------------------------------------------------------------------
 # Kernel 1: streaming fused extraction, (i, j, kf) grid
 # ---------------------------------------------------------------------------
@@ -281,52 +360,17 @@ def _tile_cand_kernel(
 
     @pl.when(kf == nkf - 1)
     def _emit():
-        ib = ij_ref[0, t]
-        jb = ij_ref[1, t]
-        s = acc_ref[...]
-        grow = ib * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        gcol = jb * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        ok = (
-            (s >= jnp.float32(threshold))
-            & (grow != gcol)
-            & (grow < n_valid)
-            & (gcol < n_valid)
-        )
-        empty_v, empty_i = _empty_buffers(block_m, k)
-        fv, fi = _merge_topk(
-            empty_v, empty_i,
-            jnp.where(ok, s, NEG_LARGE), jnp.where(ok, gcol, -1), k,
+        fv, fi, fc, bv, bi, bc = _tile_packets(
+            acc_ref[...], ij_ref[0, t], ij_ref[1, t],
+            threshold=threshold, k=k, block_m=block_m, block_n=block_n,
+            n_valid=n_valid,
         )
         fv_ref[0] = fv
         fi_ref[0] = fi
-        fc_ref[0] = jnp.sum(ok, axis=1, keepdims=True, dtype=jnp.int32)
-
-        diag = ib == jb
-
-        @pl.when(diag)
-        def _no_mirror():
-            # The diagonal tile's pairs are fully covered forward; a mirror
-            # copy would double-count. Emit an empty packet.
-            ev, ei = _empty_buffers(block_n, k)
-            bv_ref[0] = ev
-            bi_ref[0] = ei
-            bc_ref[0] = jnp.zeros((block_n, 1), jnp.int32)
-
-        @pl.when(jnp.logical_not(diag))
-        def _mirror():
-            # S = Sᵀ: the same VMEM tile scores the mirrored pairs — rows
-            # become the y-block's vectors, candidate ids the x-block's
-            # (grow.T, NOT gcol.T: gcol.T holds the mirrored row's own id).
-            sT = s.T
-            okT = ok.T
-            ev, ei = _empty_buffers(block_n, k)
-            bv, bi = _merge_topk(
-                ev, ei,
-                jnp.where(okT, sT, NEG_LARGE), jnp.where(okT, grow.T, -1), k,
-            )
-            bv_ref[0] = bv
-            bi_ref[0] = bi
-            bc_ref[0] = jnp.sum(okT, axis=1, keepdims=True, dtype=jnp.int32)
+        fc_ref[0] = fc
+        bv_ref[0] = bv
+        bi_ref[0] = bi
+        bc_ref[0] = bc
 
 
 def apss_tile_candidates_pallas(

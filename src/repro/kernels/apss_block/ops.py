@@ -192,21 +192,34 @@ def _merge_packet(cv, ci, cc, blk, pv, pi, pc, k: int):
     return cv, ci, cc
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "threshold", "k", "block_m", "block_k", "n_valid", "grid_m",
-        "interpret",
-    ),
-)
-def _compacted_inner(
-    Dp, ij, *, threshold, k, block_m, block_k, n_valid, grid_m, interpret
-):
-    fv, fi, fc, bv, bi, bc = apss_tile_candidates_pallas(
-        Dp, ij, float(threshold), k,
-        block_m=block_m, block_n=block_m, block_k=block_k,
-        n_valid=n_valid, interpret=interpret,
-    )
+def compact_worklist(mask) -> np.ndarray | None:
+    """Host-side live-mask → dense upper-triangular worklist ``(2, T)``.
+
+    Symmetrizes first (the minsize bound is asymmetric: a pair is live if
+    either orientation is) then keeps ``j ≥ i`` only — each off-diagonal
+    tile is computed once for both orientations (S = Sᵀ). Returns None when
+    nothing is live. Shared by the dense and sparse compacted paths so the
+    exactness-critical mirror convention lives in one place.
+    """
+    live = np.asarray(mask)
+    live = np.triu(live | live.T)
+    iu, ju = np.nonzero(live)
+    if iu.size == 0:
+        return None
+    return np.stack([iu, ju]).astype(np.int32)
+
+
+def fold_packets(ij, fv, fi, fc, bv, bi, bc, *, grid_m, block_m, k):
+    """XLA scan folding per-live-tile candidate packets into flat buffers.
+
+    ``ij (2, T)`` worklist of upper-triangular tile coordinates; ``f*`` are
+    the forward packets (rows of block ``ij[0, t]``), ``b*`` the mirror
+    packets (rows of block ``ij[1, t]``; empty on diagonal tiles). Counts
+    are ``(T, block_m)``. Exactness relies on the worklist contract: packet
+    ids entering one row block come from disjoint column ranges. Shared by
+    the dense (:func:`apss_fused_compacted`) and sparse
+    (``kernels.apss_block.sparse``) worklist paths.
+    """
 
     def step(carry, inp):
         cv, ci, cc = carry
@@ -222,12 +235,33 @@ def _compacted_inner(
         jnp.zeros((grid_m, block_m), jnp.int32),
     )
     (cv, ci, cc), _ = jax.lax.scan(
-        step, carry0, (ij[0], ij[1], fv, fi, fc[..., 0], bv, bi, bc[..., 0])
+        step, carry0, (ij[0], ij[1], fv, fi, fc, bv, bi, bc)
     )
     values = jnp.where(ci >= 0, cv, NEG_INF).reshape(grid_m * block_m, k)
     indices = ci.reshape(grid_m * block_m, k)
     counts = cc.reshape(grid_m * block_m)
     return values, indices, counts
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "k", "block_m", "block_k", "n_valid", "grid_m",
+        "interpret",
+    ),
+)
+def _compacted_inner(
+    Dp, ij, *, threshold, k, block_m, block_k, n_valid, grid_m, interpret
+):
+    fv, fi, fc, bv, bi, bc = apss_tile_candidates_pallas(
+        Dp, ij, float(threshold), k,
+        block_m=block_m, block_n=block_m, block_k=block_k,
+        n_valid=n_valid, interpret=interpret,
+    )
+    return fold_packets(
+        ij, fv, fi, fc[..., 0], bv, bi, bc[..., 0],
+        grid_m=grid_m, block_m=block_m, k=k,
+    )
 
 
 def apss_fused_compacted(
@@ -259,13 +293,10 @@ def apss_fused_compacted(
     mask = block_prune_mask(
         Dp, Dp, threshold, block_m, block_m, use_minsize=use_minsize
     )
-    live = np.asarray(mask)
-    live = live | live.T  # minsize bound is asymmetric; a pair is live if
-    live = np.triu(live)  # either orientation is, and we compute j ≥ i only
-    iu, ju = np.nonzero(live)
-    if iu.size == 0:
+    wl = compact_worklist(mask)
+    if wl is None:
         return empty_matches(n, k)
-    ij = jnp.asarray(np.stack([iu, ju]).astype(np.int32))
+    ij = jnp.asarray(wl)
 
     values, indices, counts = _compacted_inner(
         Dp, ij, threshold=float(threshold), k=k, block_m=block_m,

@@ -1,0 +1,315 @@
+"""CSR tile kernels: the sparse APSS worklist path.
+
+The dense worklist path (``ops.apss_fused_compacted``) still does
+``O(bm·bn·m)`` MXU work per live tile — mostly zeros at the paper's
+densities. This module adds the sparse twin, built on **per-block support
+compaction** (the gather-densify-per-tile form of the paper's partial
+indexing):
+
+1. Host side, each row block ``B`` gets its sorted unique dimension list
+   ``bdims[B] (S,)`` (``S`` = max support size over blocks, lane-padded)
+   and its rows densified onto that list: ``bx[B] (bm, S)``. For
+   support-coherent corpora ``S « m``.
+2. The live-tile worklist comes from ``core.pruning.sparse_block_prune_mask``
+   — inverted-index candidacy ∧ maxweight ∧ exact minsize — computed from
+   CSR only.
+3. Per live tile ``(I, J)``: block ``J``'s CSR rows are gathered onto
+   ``bdims[I]`` (binary search + scatter, XLA) giving ``yg (bn, S)``; tile
+   scores are then the **dense** matmul ``bx[I] · ygᵀ`` — exact, because
+   every nonzero of block ``I`` lies inside its own support and dimensions
+   outside it contribute zero. MXU work per tile drops from ``O(bm·bn·m)``
+   to ``O(bm·bn·S)``.
+4. :func:`sparse_tile_candidates_pallas` consumes ``(bx, yg)`` on a
+   scalar-prefetched 1-D worklist grid and emits forward/mirror candidate
+   packets exactly like the dense ``apss_tile_candidates_pallas``
+   (S = Sᵀ halves work; ``ops.fold_packets`` folds them into ``Matches``).
+   ``use_kernel=False`` runs the same tiles through an XLA scan instead —
+   that is the production path off-TPU (Pallas interpret mode is a
+   debugger, not a backend).
+
+Exactness contract: identical ``match_set``/``counts`` to
+``apss_reference`` on the densified corpus (``tests/test_sparse.py``),
+duplicates-sum semantics included (duplicate coordinates land in the same
+gathered slot and accumulate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.matches import Matches, empty_matches
+from repro.core.pruning import sparse_block_prune_mask
+from repro.core.sparse import SparseCorpus, pad_rows_sparse
+from repro.kernels._compat import tpu_compiler_params
+from repro.kernels.apss_block.fused import _tile_packets, _topk_sort
+from repro.kernels.apss_block.ops import _on_tpu, compact_worklist, fold_packets
+
+
+def block_support_gather(
+    sp: SparseCorpus, block_m: int, *, pad_to: int = 128
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side per-block support compaction.
+
+    Returns ``bdims (nb, S)`` — sorted unique dims per row block, padded
+    with the sentinel ``m`` (sorts last, matches nothing) — and
+    ``bx (nb, bm, S)`` — the block's rows densified onto its own support.
+    ``S`` is lane-padded (``pad_to``) for MXU alignment.
+    """
+    idx = np.asarray(sp.indices)
+    val = np.asarray(sp.values)
+    nnz = np.asarray(sp.nnz)
+    n, cap = idx.shape
+    assert n % block_m == 0, (n, block_m)
+    nb = n // block_m
+    valid = np.arange(cap)[None, :] < nnz[:, None]
+    uniq = []
+    for b in range(nb):
+        sl = slice(b * block_m, (b + 1) * block_m)
+        uniq.append(np.unique(idx[sl][valid[sl]]))
+    S = max(1, max((len(u) for u in uniq), default=1))
+    S = -(-S // pad_to) * pad_to
+    bdims = np.full((nb, S), sp.m, np.int32)
+    bx = np.zeros((nb, block_m, S), np.float32)
+    rows = np.arange(block_m)[:, None]
+    for b, u in enumerate(uniq):
+        if len(u) == 0:
+            continue
+        bdims[b, : len(u)] = u
+        sl = slice(b * block_m, (b + 1) * block_m)
+        pos = np.searchsorted(u, idx[sl])
+        pos = np.minimum(pos, len(u) - 1)
+        hit = (u[pos] == idx[sl]) & valid[sl]
+        np.add.at(bx[b], (rows, pos), np.where(hit, val[sl], 0.0))
+    return bdims, bx
+
+
+def _gather_block(bd: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """Gather one CSR block onto a support list ``bd (S,)`` → ``(bn, S)``.
+
+    Binary search into the sorted support; misses (dims outside ``bd``,
+    padding slots) contribute 0; duplicate coordinates accumulate.
+    """
+    S = bd.shape[0]
+    pos = jnp.searchsorted(bd, idx)  # (bn, cap), in [0, S]
+    in_range = jnp.minimum(pos, S - 1)
+    hit = jnp.take(bd, in_range) == idx
+    contrib = jnp.where(hit, val.astype(jnp.float32), 0.0)
+    r = jnp.arange(idx.shape[0], dtype=jnp.int32)[:, None]
+    return jnp.zeros((idx.shape[0], S), jnp.float32).at[r, in_range].add(contrib)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: 1-D worklist grid over support-compacted tiles
+# ---------------------------------------------------------------------------
+
+
+def _sparse_tile_kernel(
+    ij_ref,     # scalar-prefetch (2, T) i32 — live (i, j) tile coordinates
+    bx_ref,     # (1, bm, S) — row block densified on its own support
+    yg_ref,     # (1, bm, S) — col block gathered onto the row block support
+    fv_ref,     # out (1, bm, k) f32 — forward candidates (tile rows)
+    fi_ref,     # out (1, bm, k) i32
+    fc_ref,     # out (1, bm, 1) i32
+    bv_ref,     # out (1, bm, k) f32 — backward candidates (mirror rows)
+    bi_ref,     # out (1, bm, k) i32
+    bc_ref,     # out (1, bm, 1) i32
+    *,
+    threshold: float,
+    k: int,
+    block_m: int,
+    n_valid: int,
+):
+    t = pl.program_id(0)
+    s = jax.lax.dot_general(
+        bx_ref[0],
+        yg_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    fv, fi, fc, bv, bi, bc = _tile_packets(
+        s, ij_ref[0, t], ij_ref[1, t],
+        threshold=threshold, k=k, block_m=block_m, block_n=block_m,
+        n_valid=n_valid,
+    )
+    fv_ref[0] = fv
+    fi_ref[0] = fi
+    fc_ref[0] = fc
+    bv_ref[0] = bv
+    bi_ref[0] = bi
+    bc_ref[0] = bc
+
+
+def sparse_tile_candidates_pallas(
+    bx: jax.Array,
+    yg: jax.Array,
+    ij: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_m: int,
+    n_valid: int,
+    interpret: bool = False,
+):
+    """Per-live-tile candidate packets from support-compacted operands.
+
+    ``bx (nb, bm, S)`` rides the scalar-prefetched row-block index
+    ``ij[0, t]``; ``yg (T, bm, S)`` is per-worklist-tile. One grid step per
+    live tile, one ``(bm, S)×(S, bm)`` MXU contraction each — the sparse
+    analogue of ``apss_tile_candidates_pallas`` with ``S`` in place of
+    ``m``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    nb, bm, S = bx.shape
+    T = ij.shape[1]
+    assert yg.shape == (T, bm, S), (yg.shape, (T, bm, S))
+    assert ij.shape == (2, T)
+
+    kernel = functools.partial(
+        _sparse_tile_kernel,
+        threshold=threshold, k=k, block_m=block_m, n_valid=n_valid,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, bm, S), lambda t, ij: (ij[0, t], 0, 0)),
+            pl.BlockSpec((1, bm, S), lambda t, ij: (t, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, k), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, bm, k), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, bm, 1), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, bm, k), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, bm, k), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, bm, 1), lambda t, ij: (t, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, bm, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, bm, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, bm, 1), jnp.int32),
+            jax.ShapeDtypeStruct((T, bm, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, bm, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, bm, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(ij.astype(jnp.int32), bx, yg)
+
+
+# ---------------------------------------------------------------------------
+# The jitted inner: gather → score → packets (XLA scan or Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "k", "block_m", "n_valid", "grid_m", "use_kernel",
+        "interpret",
+    ),
+)
+def _sparse_compacted_inner(
+    bx, bdims, idxb, valb, ij, *,
+    threshold, k, block_m, n_valid, grid_m, use_kernel, interpret,
+):
+    T = ij.shape[1]
+
+    def gather_t(t):
+        return _gather_block(bdims[ij[0, t]], idxb[ij[1, t]], valb[ij[1, t]])
+
+    if use_kernel:
+        # The kernel consumes per-tile gathered operands as a streamed
+        # input, so the (T, bm, S) buffer is materialized; moving the
+        # binary-search gather in-kernel would remove it (ROADMAP).
+        _, yg = lax.scan(lambda _, t: (_, gather_t(t)), 0, jnp.arange(T))
+        fv, fi, fc, bv, bi, bc = sparse_tile_candidates_pallas(
+            bx, yg, ij, float(threshold), k,
+            block_m=block_m, n_valid=n_valid, interpret=interpret,
+        )
+    else:
+        # XLA path gathers INSIDE the tile scan: peak extra memory is one
+        # (bm, S) tile, never O(T · bm · S).
+        def tile(_, t):
+            s = jnp.einsum(
+                "rs,cs->rc", bx[ij[0, t]], gather_t(t),
+                preferred_element_type=jnp.float32,
+            )
+            return _, _tile_packets(
+                s, ij[0, t], ij[1, t],
+                threshold=threshold, k=k, block_m=block_m, block_n=block_m,
+                n_valid=n_valid, topk=_topk_sort,
+            )
+
+        _, (fv, fi, fc, bv, bi, bc) = lax.scan(tile, 0, jnp.arange(T))
+
+    return fold_packets(
+        ij, fv, fi, fc[..., 0], bv, bi, bc[..., 0],
+        grid_m=grid_m, block_m=block_m, k=k,
+    )
+
+
+def apss_sparse_compacted(
+    sp: SparseCorpus,
+    threshold: float,
+    k: int,
+    *,
+    block_m: int = 256,
+    block_mask: jax.Array | None = None,
+    use_minsize: bool = True,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+    lane_pad: int = 128,
+) -> Matches:
+    """Sparse self-join via inverted-index worklist + CSR tile scoring.
+
+    The sparse twin of ``ops.apss_fused_compacted``: the live mask comes
+    from CSR-only bounds (inverted-index candidacy included), the worklist
+    is host-compacted (upper-triangular, S = Sᵀ mirrors), and each live
+    tile costs ``O(bm² · S)`` instead of ``O(bm² · m)``. ``use_kernel``
+    selects the Pallas worklist kernel (TPU; interpret off-TPU) over the
+    jitted XLA scan. Host compaction makes the entry non-traceable — same
+    contract as the dense compacted path. ``block_mask`` (``(nb, nb)``
+    LIVE bools over the row-padded corpus) skips the internal bound
+    computation when the caller already has it (same convention as the
+    dense ``apss_fused``); it must be conservative or exactness is lost.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = sp.n
+    spp, _ = pad_rows_sparse(sp, block_m)
+    grid_m = spp.n // block_m
+
+    mask = (
+        block_mask
+        if block_mask is not None
+        else sparse_block_prune_mask(
+            spp, spp, threshold, block_m, use_minsize=use_minsize
+        )
+    )
+    wl = compact_worklist(mask)
+    if wl is None:
+        return empty_matches(n, k)
+    ij = jnp.asarray(wl)
+
+    bdims, bx = block_support_gather(spp, block_m, pad_to=lane_pad)
+    idxb = spp.indices.reshape(grid_m, block_m, spp.cap)
+    valb = spp.values.reshape(grid_m, block_m, spp.cap)
+    values, indices, counts = _sparse_compacted_inner(
+        jnp.asarray(bx), jnp.asarray(bdims), idxb, valb, ij,
+        threshold=float(threshold), k=k, block_m=block_m, n_valid=n,
+        grid_m=grid_m, use_kernel=use_kernel, interpret=interpret,
+    )
+    return Matches(values=values[:n], indices=indices[:n], counts=counts[:n])

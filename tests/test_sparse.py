@@ -1,0 +1,308 @@
+"""Sparse APSS subsystem: representation roundtrips, inverted-index pruning
+soundness, and sparse↔dense exactness of every scoring path (single-device
+XLA + Pallas worklist kernel + all distributed sparse variants) across
+densities, empty rows, duplicate coordinates, and non-tile-multiple shapes.
+
+The contract under test (DESIGN.md §5): every sparse path produces the
+identical ``match_set`` and exact ``counts`` as ``apss_reference`` on the
+densified corpus.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apss import apss_blocked, apss_reference, normalize_rows, similarity_topk
+from repro.core.graph import match_set
+from repro.core.pruning import (
+    sparse_block_prune_mask,
+    sparse_block_support,
+    sparse_candidate_mask,
+)
+from repro.core.sparse import (
+    SparseCorpus,
+    density,
+    from_dense,
+    normalize_sparse,
+    pad_rows_sparse,
+    shard_dims,
+    sparse_similarity_topk,
+    to_dense,
+)
+from repro.data.sparse import sparse_clustered_corpus, sparse_zipfian_corpus
+from repro.kernels.apss_block.sparse import apss_sparse_compacted
+
+T, K = 0.3, 16
+
+
+def _dense_corpus(n, m, dens, seed=0, empty_rows=()):
+    rng = np.random.default_rng(seed)
+    D = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    D *= rng.random((n, m)) < dens
+    for r in empty_rows:
+        D[r] = 0
+    return np.asarray(normalize_rows(jnp.asarray(D)))
+
+
+def _check(got, ref):
+    assert match_set(got) == match_set(ref)
+    np.testing.assert_array_equal(np.asarray(got.counts), np.asarray(ref.counts))
+
+
+# -- representation -----------------------------------------------------------
+
+
+def test_from_dense_to_dense_roundtrip():
+    D = _dense_corpus(40, 64, 0.2, seed=1, empty_rows=(3, 39))
+    sp = from_dense(D)
+    np.testing.assert_allclose(np.asarray(to_dense(sp)), D, rtol=1e-6)
+    assert sp.shape == D.shape
+    assert np.asarray(sp.nnz).sum() == (D != 0).sum()
+
+
+def test_duplicate_coordinates_sum_in_to_dense():
+    # COO convention: duplicate (row, dim) slots sum.
+    sp = SparseCorpus(
+        jnp.asarray([[2, 2, 5], [0, 0, 0]], jnp.int32),
+        jnp.asarray([[1.0, 2.0, 4.0], [3.0, 0.0, 0.0]], jnp.float32),
+        jnp.asarray([3, 1], jnp.int32),
+        m=8,
+    )
+    d = np.asarray(to_dense(sp))
+    assert d[0, 2] == 3.0 and d[0, 5] == 4.0 and d[1, 0] == 3.0
+
+
+def test_generators_are_normalized_and_never_dense():
+    for sp in (
+        sparse_zipfian_corpus(50, 4096, 6, seed=2),
+        sparse_clustered_corpus(50, 4096, 6, n_clusters=16, seed=2),
+    ):
+        # O(n · cap) memory: capacity tracks realized nnz, not m.
+        assert sp.cap < 64 < sp.m
+        nrm = np.linalg.norm(np.asarray(to_dense(sp)), axis=1)
+        np.testing.assert_allclose(nrm, 1.0, rtol=1e-5)
+        assert 0 < density(sp) < 0.02
+
+
+def test_normalize_sparse_matches_dense_normalize():
+    D = _dense_corpus(16, 32, 0.3, seed=4) * 5.0
+    sp = normalize_sparse(from_dense(D))
+    np.testing.assert_allclose(
+        np.asarray(to_dense(sp)),
+        np.asarray(normalize_rows(jnp.asarray(D))),
+        rtol=1e-5,
+    )
+
+
+def test_shard_dims_partition_is_lossless():
+    D = _dense_corpus(24, 48, 0.3, seed=5)
+    sp = from_dense(D)
+    idx_s, val_s, nnz_s, m_loc = shard_dims(sp, 4)
+    assert m_loc == 12
+    back = np.zeros_like(D)
+    for d in range(4):
+        loc = SparseCorpus(
+            jnp.asarray(idx_s[d]), jnp.asarray(val_s[d]),
+            jnp.asarray(nnz_s[d]), m_loc,
+        )
+        back[:, d * m_loc:(d + 1) * m_loc] += np.asarray(to_dense(loc))
+    np.testing.assert_allclose(back, D, rtol=1e-6)
+
+
+# -- inverted-index candidate generation + sparse bounds ----------------------
+
+
+def test_sparse_candidate_mask_is_support_intersection():
+    sp = sparse_clustered_corpus(64, 256, 6, n_clusters=8, seed=3)
+    spp, _ = pad_rows_sparse(sp, 8)
+    sup = sparse_block_support(spp, 8)
+    cand = np.asarray(sparse_candidate_mask(sup, sup))
+    want = (np.asarray(sup).astype(np.int32) @ np.asarray(sup).T) > 0
+    np.testing.assert_array_equal(cand, want)
+    # 8 disjoint dimension bands over 8 row blocks ⇒ only diagonal tiles.
+    assert cand.sum() < cand.size
+
+
+def test_sparse_prune_mask_sound_and_matches_dense_bound():
+    D = _dense_corpus(64, 96, 0.15, seed=6)
+    sp = from_dense(D)
+    b = 8
+    mask = np.asarray(sparse_block_prune_mask(sp, sp, T, b))
+    S = D @ D.T
+    for i in range(64 // b):
+        for j in range(64 // b):
+            if not mask[i, j]:
+                blk = S[i * b:(i + 1) * b, j * b:(j + 1) * b].copy()
+                if i == j:
+                    np.fill_diagonal(blk, 0.0)
+                assert blk.max() < T  # pruned ⇒ provably matchless
+
+
+# -- single-device exactness --------------------------------------------------
+
+
+@pytest.mark.parametrize("dens", [0.001, 0.01, 0.1])
+def test_blocked_sparse_exact_across_densities(dens):
+    sp = sparse_zipfian_corpus(96, 2048, max(2, dens * 2048), seed=7)
+    ref = apss_reference(to_dense(sp), T, K)
+    _check(sparse_similarity_topk(sp, sp, T, K, block_rows=32, exclude_self=True), ref)
+    _check(apss_blocked(sp, T, K, block_rows=32), ref)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sparse_compacted_exact(use_kernel):
+    sp = sparse_clustered_corpus(96, 512, 8, n_clusters=8, seed=8)
+    ref = apss_reference(to_dense(sp), 0.4, K)
+    got = apss_sparse_compacted(
+        sp, 0.4, K, block_m=16, lane_pad=8, use_kernel=use_kernel
+    )
+    _check(got, ref)
+
+
+@pytest.mark.parametrize("n", [33, 96, 100])  # non-tile-multiple shapes
+def test_sparse_compacted_ragged_shapes(n):
+    D = _dense_corpus(n, 80, 0.15, seed=n, empty_rows=(0, n - 1))
+    sp = from_dense(D)
+    ref = apss_reference(jnp.asarray(D), T, K)
+    _check(apss_sparse_compacted(sp, T, K, block_m=16, lane_pad=8), ref)
+    _check(sparse_similarity_topk(sp, sp, T, K, block_rows=16, exclude_self=True), ref)
+
+
+def test_sparse_compacted_all_pruned_returns_empty():
+    sp = from_dense(_dense_corpus(32, 64, 0.1, seed=9))
+    got = apss_sparse_compacted(sp, 1.5, K, block_m=16, lane_pad=8)
+    assert int(np.asarray(got.counts).sum()) == 0
+    assert (np.asarray(got.indices) == -1).all()
+
+
+def test_sparse_rectangular_join_with_offsets():
+    Q = from_dense(_dense_corpus(24, 64, 0.2, seed=10))
+    C = from_dense(_dense_corpus(40, 64, 0.2, seed=11))
+    S = np.asarray(to_dense(Q)) @ np.asarray(to_dense(C)).T
+    got = similarity_topk(Q, C, T, K, block_rows=16, col_offset=100)
+    counts = (S >= T).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(got.counts), counts)
+    idx = np.asarray(got.indices)
+    for r in range(24):
+        want = {int(c) + 100 for c in np.nonzero(S[r] >= T)[0]}
+        assert set(idx[r][idx[r] >= 0]) == want
+
+
+def test_blocked_sparse_prune_stats():
+    sp = sparse_clustered_corpus(64, 512, 8, n_clusters=8, seed=12)
+    m, stats = apss_blocked(sp, 0.4, K, block_rows=16, with_prune_stats=True)
+    _check(m, apss_reference(to_dense(sp), 0.4, K))
+    assert 0 < int(stats.live_blocks) <= int(stats.total_blocks)
+
+
+def test_sparse_use_kernel_rejects_rectangular():
+    Q = from_dense(_dense_corpus(16, 32, 0.3, seed=13))
+    with pytest.raises(ValueError):
+        similarity_topk(Q, Q, T, K, use_kernel=True)
+
+
+# -- distributed sparse variants ----------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sparse128():
+    D = _dense_corpus(128, 96, 0.15, seed=14, empty_rows=(17,))
+    return from_dense(D), apss_reference(jnp.asarray(D), T, K)
+
+
+@pytest.mark.parametrize("schedule", ["allgather", "ring"])
+def test_sparse_horizontal_exact(mesh8, sparse128, schedule):
+    from repro.core.distributed import apss_horizontal
+
+    sp, ref = sparse128
+    got = apss_horizontal(sp, T, K, mesh8, "data", schedule=schedule, block_rows=16)
+    _check(got, ref)
+
+
+@pytest.mark.parametrize(
+    "accumulation", ["allreduce", "scatter", "compressed", "recursive"]
+)
+def test_sparse_vertical_exact(mesh8_model, sparse128, accumulation):
+    from repro.core.distributed import apss_vertical
+
+    sp, ref = sparse128
+    got = apss_vertical(
+        sp, T, K, mesh8_model, "model", accumulation=accumulation, block_rows=16
+    )
+    _check(got, ref)
+
+
+def test_sparse_2d_raises_not_implemented(mesh4x2, sparse128):
+    from repro.core.distributed import apss_2d
+
+    with pytest.raises(NotImplementedError):
+        apss_2d(sparse128[0], T, K, mesh4x2)
+
+
+# -- adversarial CSR structure (shared with tests/test_sparse_properties.py) --
+
+
+def random_csr(seed, n, m, cap, *, dup_prob=0.3, empty_prob=0.2):
+    """Raw CSR with adversarial structure: duplicate coordinates (which by
+    convention sum) and empty rows, not necessarily normalized."""
+    rng = np.random.default_rng(seed)
+    nnz = rng.integers(0, cap + 1, size=n).astype(np.int32)
+    nnz[rng.random(n) < empty_prob] = 0
+    idx = rng.integers(0, m, size=(n, cap)).astype(np.int32)
+    if rng.random() < dup_prob and cap > 1:
+        idx[:, 1] = idx[:, 0]  # force duplicates in every non-trivial row
+    val = (rng.random((n, cap)).astype(np.float32) * 0.8).astype(np.float32)
+    mask = np.arange(cap)[None, :] < nnz[:, None]
+    return SparseCorpus(
+        jnp.asarray(np.where(mask, idx, 0)),
+        jnp.asarray(np.where(mask, val, 0.0)),
+        jnp.asarray(nnz),
+        m,
+    )
+
+
+def test_duplicate_concentration_is_not_pruned():
+    """Regression: per-slot maxweight under-bounds duplicates. Row 0 stores
+    dim 3 as two 0.5 slots (effective weight 1.0); a per-slot max of 0.5
+    would prune the cross-block tile at t=0.8 and silently drop the match."""
+    idx = np.zeros((32, 2), np.int32)
+    val = np.zeros((32, 2), np.float32)
+    idx[0] = [3, 3]; val[0] = [0.5, 0.5]   # block 0: effective (3, 1.0)
+    idx[16] = [3, 0]; val[16] = [1.0, 0.0]  # block 1
+    sp = SparseCorpus(
+        jnp.asarray(idx), jnp.asarray(val),
+        jnp.asarray([2] + [0] * 15 + [1] + [0] * 15, dtype=jnp.int32), m=8,
+    )
+    t = 0.8
+    mask = np.asarray(sparse_block_prune_mask(sp, sp, t, 16))
+    assert mask[0, 1] and mask[1, 0]  # the tile with the true match is live
+    ref = apss_reference(to_dense(sp), t, 4)
+    assert int(np.asarray(ref.counts).sum()) == 2
+    _check(apss_sparse_compacted(sp, t, 4, block_m=16, lane_pad=8), ref)
+    _check(apss_sparse_compacted(sp, t, 4, block_m=16, lane_pad=8, use_kernel=True), ref)
+
+
+def test_negative_threshold_keeps_zero_similarity_pairs():
+    """Regression: at t ≤ 0 zero-similarity pairs (disjoint support) match;
+    an explicit support-intersection conjunct in the prune mask would
+    unsoundly drop them."""
+    D = np.zeros((32, 16), np.float32)
+    D[:16, 0] = 1.0   # block 0 uses dim 0 only
+    D[16:, 8] = 1.0   # block 1 uses dim 8 only — zero sim across blocks
+    sp = from_dense(D)
+    t = -0.5
+    mask = np.asarray(sparse_block_prune_mask(sp, sp, t, 16))
+    assert mask.all()
+    ref = apss_reference(jnp.asarray(D), t, 32)
+    _check(apss_sparse_compacted(sp, t, 32, block_m=16, lane_pad=8), ref)
+    _check(sparse_similarity_topk(sp, sp, t, 32, block_rows=16, exclude_self=True), ref)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_adversarial_csr_join_equals_dense_reference(seed):
+    """Non-hypothesis twin of the property test: duplicates + empty rows +
+    ragged n, fixed seeds (runs even where hypothesis is absent)."""
+    sp = random_csr(seed, 20 + 7 * seed, 40, 6)
+    ref = apss_reference(to_dense(sp), 0.3, 32)
+    _check(sparse_similarity_topk(sp, sp, 0.3, 32, block_rows=16, exclude_self=True), ref)
+    _check(apss_sparse_compacted(sp, 0.3, 32, block_m=16, lane_pad=8), ref)

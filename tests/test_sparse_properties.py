@@ -1,0 +1,98 @@
+"""Property-based sparse↔dense equivalence (hypothesis; skips cleanly
+without it, mirroring tests/test_apss_properties.py).
+
+The generator space deliberately covers the representation's contractual
+edge cases: empty rows, duplicate coordinates (which sum, by the COO
+convention), non-tile-multiple row counts, and densities from ~0.1% to
+dense-ish — across the traceable blocked join AND the host-compacted
+inverted-index worklist path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.apss import apss_reference  # noqa: E402
+from repro.core.graph import match_set  # noqa: E402
+from repro.core.pruning import sparse_block_prune_mask  # noqa: E402
+from repro.core.sparse import (  # noqa: E402
+    from_dense,
+    pad_rows_sparse,
+    sparse_similarity_topk,
+    to_dense,
+)
+from repro.kernels.apss_block.sparse import apss_sparse_compacted  # noqa: E402
+from test_sparse import random_csr  # noqa: E402  (pytest rootdir import)
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def _equiv(got, ref):
+    assert match_set(got) == match_set(ref)
+    np.testing.assert_array_equal(np.asarray(got.counts), np.asarray(ref.counts))
+
+
+@SET
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(20, 49),  # deliberately non-tile-multiple
+    t=st.floats(0.15, 0.6),
+)
+def test_sparse_join_equals_dense_reference(seed, n, t):
+    sp = random_csr(seed, n, 40, 6)
+    ref = apss_reference(to_dense(sp), t, 32)
+    _equiv(
+        sparse_similarity_topk(sp, sp, t, 32, block_rows=16, exclude_self=True),
+        ref,
+    )
+
+
+@SET
+@given(seed=st.integers(0, 10_000), t=st.floats(0.15, 0.6))
+def test_compacted_equals_dense_reference(seed, t):
+    sp = random_csr(seed, 48, 40, 6)
+    ref = apss_reference(to_dense(sp), t, 32)
+    _equiv(apss_sparse_compacted(sp, t, 32, block_m=16, lane_pad=8), ref)
+
+
+@SET
+@given(
+    seed=st.integers(0, 10_000),
+    density=st.sampled_from([0.002, 0.01, 0.1, 0.4]),
+    t=st.floats(0.15, 0.7),
+)
+def test_density_sweep_equivalence(seed, density, t):
+    rng = np.random.default_rng(seed)
+    D = np.abs(rng.standard_normal((40, 64))).astype(np.float32)
+    D *= rng.random((40, 64)) < density
+    sp = from_dense(D)
+    ref = apss_reference(jnp.asarray(D), t, 32)
+    _equiv(
+        sparse_similarity_topk(sp, sp, t, 32, block_rows=16, exclude_self=True),
+        ref,
+    )
+
+
+@SET
+@given(seed=st.integers(0, 10_000), t=st.floats(0.1, 0.9))
+def test_sparse_prune_mask_never_loses_a_match(seed, t):
+    sp = random_csr(seed, 32, 24, 5)
+    spp, _ = pad_rows_sparse(sp, 8)
+    mask = np.asarray(sparse_block_prune_mask(spp, spp, t, 8))
+    S = np.asarray(to_dense(spp))
+    S = S @ S.T
+    np.fill_diagonal(S, 0.0)
+    for i, j in zip(*np.nonzero(S >= t)):
+        assert mask[i // 8, j // 8], (i, j)
+
+
+@SET
+@given(seed=st.integers(0, 10_000))
+def test_from_dense_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    D = rng.random((17, 23)).astype(np.float32)
+    D *= rng.random((17, 23)) < 0.3
+    np.testing.assert_allclose(np.asarray(to_dense(from_dense(D))), D, rtol=1e-6)
