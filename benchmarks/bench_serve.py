@@ -1,0 +1,153 @@
+"""Serving amortization: build-once APSSIndex vs rebuild-per-call.
+
+The serving subsystem's whole thesis (DESIGN.md §6): corpus-side support
+structures — normalized CSR, block maxweight vectors, posting-list
+supports, ``bdims``/``bx`` compaction — are query-invariant, so a server
+should pay for them ONCE. This bench quantifies the claim on the paper's
+regime (sparse clustered-Zipfian corpus, default n=65536 m=8192):
+
+- ``index_build_us``     one-time cost of ``build_index``
+- ``batches[B]``         per-query latency + QPS at batch 1/8/64 against
+                         the prebuilt index (one ``query_topk`` per batch)
+- ``rebuild``            the status-quo baseline: every batch-64 call
+                         rebuilds the index from the raw corpus first
+- ``amortized_speedup_batch64``  rebuild ÷ indexed per-query latency —
+                         the headline amortization factor (≥ 5× required)
+
+Queries are perturbed corpus rows drawn from a contiguous cluster range
+per batch (topical traffic — the regime where the prebuilt posting lists
+prune hardest). Run standalone to merge a ``serving`` section into
+BENCH_apss.json:
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --json BENCH_apss.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+BATCHES = (1, 8, 64)
+
+
+def measure(
+    n: int = 65536,
+    m: int = 8192,
+    *,
+    avg_nnz: float = 16.0,
+    block: int = 256,
+    threshold: float = 0.5,
+    k: int = 32,
+    iters: int = 3,
+    seed: int = 0,
+) -> dict:
+    import jax
+
+    from benchmarks.common import time_fn
+    from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.serving import build_index, query_topk
+    from repro.serving.index import index_nbytes
+
+    t0 = time.perf_counter()
+    sp = sparse_clustered_corpus(n, m, avg_nnz, n_clusters=32, seed=seed)
+    gen_s = time.perf_counter() - t0
+
+    def build():
+        return build_index(sp, block_rows=block, normalize=False)
+
+    t0 = time.perf_counter()
+    index = build()
+    jax.block_until_ready(jax.tree_util.tree_leaves(index))
+    build_us = (time.perf_counter() - t0) * 1e6
+
+    out = {
+        "n": sp.n,
+        "m": sp.m,
+        "avg_nnz": avg_nnz,
+        "block_rows": block,
+        "threshold": threshold,
+        "k": k,
+        "corpus_gen_s": round(gen_s, 2),
+        "index_build_us": build_us,
+        "index_bytes": index_nbytes(index),
+        "batches": {},
+    }
+
+    qmax = perturbed_queries(sp, max(BATCHES), seed=seed + 1)
+    for B in BATCHES:
+        Q = qmax[:B]
+        us, res = time_fn(
+            lambda q: query_topk(index, q, threshold, k),
+            Q, warmup=1, iters=iters, return_result=True,
+        )
+        out["batches"][str(B)] = {
+            "us_per_call": us,
+            "us_per_query": us / B,
+            "qps": 1e6 * B / us,
+            "total_matches": int(np.asarray(res.counts).sum()),
+        }
+
+    # Status-quo baseline: rebuild every corpus-side structure per call
+    # (what a similarity_topk-shaped entry point does today), batch 64.
+    B = max(BATCHES)
+    Q = qmax[:B]
+
+    def rebuild_and_query(q):
+        return query_topk(build(), q, threshold, k)
+
+    rb_us = time_fn(rebuild_and_query, Q, warmup=1, iters=iters)
+    indexed_pq = out["batches"][str(B)]["us_per_query"]
+    out["rebuild"] = {
+        "us_per_call": rb_us,
+        "us_per_query": rb_us / B,
+    }
+    out["amortized_speedup_batch64"] = (rb_us / B) / indexed_pq
+    return out
+
+
+def merge_into(path: str, r: dict) -> None:
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["serving"] = r
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_apss.json", default=None)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--m", type=int, default=8192)
+    ap.add_argument("--avg-nnz", type=float, default=16.0)
+    ap.add_argument("--block", type=int, default=256)
+    ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    r = measure(
+        args.n, args.m, avg_nnz=args.avg_nnz, block=args.block,
+        threshold=args.threshold, k=args.k, iters=args.iters,
+    )
+    print(f"index build: {r['index_build_us']/1e6:.2f}s "
+          f"({r['index_bytes']/2**20:.0f} MiB)")
+    for B, e in r["batches"].items():
+        print(f"batch {B:>3}: {e['us_per_query']:.0f} us/query "
+              f"({e['qps']:.1f} QPS, {e['total_matches']} matches)")
+    print(f"rebuild-per-call batch 64: {r['rebuild']['us_per_query']:.0f} "
+          f"us/query -> amortized speedup "
+          f"{r['amortized_speedup_batch64']:.1f}x")
+    if args.json:
+        merge_into(args.json, r)
+        print(f"-> merged 'serving' into {args.json}")
+
+
+if __name__ == "__main__":
+    main()

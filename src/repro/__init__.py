@@ -17,6 +17,8 @@ Subpackages:
 - :mod:`repro.distributed` — mesh/collective helpers, elastic re-mesh
 - :mod:`repro.configs`     — assigned architecture configs
 - :mod:`repro.launch`      — mesh, dry-run, train and serve entry points
+- :mod:`repro.serving`     — build-once APSS index + batched query-time
+                             top-k retrieval server
 
 NOTE: this module is import-side-effect free (no jax import at package
 import time) so that ``launch/dryrun.py`` can set
@@ -38,6 +40,10 @@ _LAZY = {
     "apss_horizontal": ("repro.core.distributed", "apss_horizontal"),
     "apss_vertical": ("repro.core.distributed", "apss_vertical"),
     "apss_2d": ("repro.core.distributed", "apss_2d"),
+    "APSSIndex": ("repro.serving.index", "APSSIndex"),
+    "build_index": ("repro.serving.index", "build_index"),
+    "query_topk": ("repro.serving.query", "query_topk"),
+    "RetrievalServer": ("repro.serving.server", "RetrievalServer"),
 }
 
 

@@ -20,11 +20,15 @@ from repro.core.apss import (  # noqa: F401
 )
 from repro.core.matches import Matches, extract_matches, merge_matches  # noqa: F401
 from repro.core.pruning import (  # noqa: F401
+    BlockStats,
     block_maxweight_bounds,
     block_minsize_bounds,
     block_prune_mask,
+    dense_block_stats,
+    live_tile_mask,
     local_threshold,
     sparse_block_prune_mask,
+    sparse_block_stats,
     sparse_candidate_mask,
 )
 from repro.core.sparse import (  # noqa: F401

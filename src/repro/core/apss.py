@@ -25,8 +25,9 @@ from repro.core.matches import Matches, extract_matches, merge_matches
 from repro.core.pruning import (
     PruneStats,
     block_prune_mask,
+    live_tile_mask,
     prune_stats,
-    sparse_block_prune_mask,
+    sparse_block_stats,
 )
 from repro.core.sparse import (
     SparseCorpus,
@@ -214,17 +215,22 @@ def _apss_blocked_sparse(
     with_prune_stats: bool,
     use_kernel: bool,
 ) -> Matches | tuple[Matches, PruneStats]:
-    mask = None
+    mask = ub = None
     bs = _kernel_tile(block_rows) if use_kernel else block_rows
     if with_prune_stats or use_kernel:
+        # Index-build half (block stats) separated from the scoring-time
+        # mask so the bounds are computed exactly once here and shared by
+        # the worklist AND the accounting (serving builds the same stats
+        # once per corpus — see serving/index.py).
         Dp, _ = pad_rows_sparse(D, bs)
-        mask = sparse_block_prune_mask(Dp, Dp, threshold, bs)
+        stats = sparse_block_stats(Dp, bs)
+        mask, ub = live_tile_mask(stats, stats, threshold, return_ub=True)
     if use_kernel:
         from repro.kernels.apss_block.sparse import apss_sparse_compacted
 
         m = apss_sparse_compacted(
             D, float(threshold), k,
-            block_m=bs, block_mask=mask, use_kernel=True,
+            block_m=bs, block_mask=mask, block_ub=ub, use_kernel=True,
         )
     else:
         m = sparse_similarity_topk(

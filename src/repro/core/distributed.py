@@ -137,11 +137,11 @@ def apss_horizontal(
     tiles) instead of the XLA einsum + ``extract_matches`` pair — the ring
     step's dynamic column offset feeds the kernel directly.
 
-    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus` (allgather and
-    ring schedules): the CSR triple shards/travels instead of dense rows —
-    collective volume drops from ``O(n_loc · m)`` to ``O(n_loc · cap)``
-    per hop, a factor ``≈ 1/density`` — and every block pair is scored with
-    the gather-dot sparse tile primitive.
+    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus` (allgather,
+    ring and halfring schedules): the CSR triple shards/travels instead of
+    dense rows — collective volume drops from ``O(n_loc · m)`` to
+    ``O(n_loc · cap)`` per hop, a factor ``≈ 1/density`` — and every block
+    pair is scored with the gather-dot sparse tile primitive.
     """
     if isinstance(D, SparseCorpus):
         return _apss_horizontal_sparse(
@@ -394,9 +394,15 @@ def _apss_horizontal_sparse(
             _sparse_horizontal_ring, m=D.m, threshold=threshold, k=k,
             axis_name=axis_name, p=p, block_rows=block_rows,
         )
+    elif schedule == "halfring":
+        body = functools.partial(
+            _sparse_horizontal_halfring, m=D.m, threshold=threshold, k=k,
+            axis_name=axis_name, p=p, block_rows=block_rows,
+        )
     else:
         raise ValueError(
-            f"sparse horizontal supports allgather|ring, got: {schedule}"
+            f"sparse horizontal supports allgather|ring|halfring, "
+            f"got: {schedule}"
         )
     # The VMA checker has no rule for the scatter/gather ops inside the
     # sparse tile primitive on some JAX versions; verified numerically.
@@ -463,6 +469,82 @@ def _sparse_horizontal_ring(
     matches0 = _pvary(_empty_local_matches(n_loc, k), axis_name)
     buf, matches = lax.fori_loop(0, p - 1, step, ((idx, val, nnz), matches0))
     return compute(buf, p - 1, matches)
+
+
+def _sparse_horizontal_halfring(
+    idx, val, nnz, *, m, threshold, k, axis_name, p, block_rows
+):
+    """Half-ring on CSR: the traveling CSR triple makes only ⌈(p-1)/2⌉ hops.
+
+    Identical caravan structure to the dense ``_horizontal_halfring`` —
+    the S = Sᵀ wire-halving is schedule-level, so the CSR triple rides it
+    unchanged: each hop moves ``O(n_loc · cap)`` words (the triple) plus
+    the ``O(n_loc · k)`` caravan of backward matches, half as many block
+    hops as the sparse ring. Like the dense *kernel* halfring path, the
+    two orientations of a cross tile are two sparse joins with swapped
+    arguments rather than one score matrix read twice (the blocked sparse
+    scorer never materializes the tile's scores to transpose), so compute
+    matches the ring while wire traffic halves. Parity with the sparse
+    ring is asserted by ``tests/test_sparse.py``.
+    """
+    n_loc = idx.shape[0]
+    me = lax.axis_index(axis_name)
+    row_off = me * n_loc
+    bs = min(block_rows, n_loc)
+    half = p // 2
+    loc = SparseCorpus(idx, val, nnz, m)
+
+    def join(Q, C, row_o, col_o):
+        return sparse_similarity_topk(
+            Q, C, threshold, k, block_rows=bs, exclude_self=True,
+            row_offset=row_o, col_offset=col_o, vary_axes=(axis_name,),
+        )
+
+    # Step 0: self block.
+    matches = join(loc, loc, row_off, row_off)
+    if p == 1:
+        return matches
+
+    def cross_tile(buf, s, need_bwd=True):
+        src = jnp.mod(me - s, p)  # owner of `buf`
+        col_off = src * n_loc
+        cur = SparseCorpus(*buf, m)
+        fwd = join(loc, cur, row_off, col_off)
+        if not need_bwd:  # even-p final step: mirror covered forward
+            return fwd, None
+        bwd = join(cur, loc, col_off, row_off)
+        return fwd, bwd
+
+    def hop(x):
+        return lax.ppermute(x, axis_name, perm=_ring_perm(p))
+
+    def step(s, carry):
+        buf, caravan, mm = carry
+        buf = jax.tree.map(hop, buf)
+        caravan = jax.tree.map(hop, caravan)
+        fwd, bwd = cross_tile(buf, s)
+        return buf, merge_matches(caravan, bwd), merge_matches(mm, fwd)
+
+    caravan = _pvary(_empty_local_matches(n_loc, k), axis_name)
+    buf, caravan, matches = lax.fori_loop(
+        1, half, step, ((idx, val, nnz), caravan, matches)
+    )
+    # Final offset s = half: forward always; backward only when p is odd
+    # (for even p both orientations of the antipodal pair are covered
+    # forward, and a backward copy would double-count).
+    if p % 2 == 1:
+        buf, caravan, matches = step(half, (buf, caravan, matches))
+    else:
+        buf = jax.tree.map(hop, buf)
+        caravan = jax.tree.map(hop, caravan)
+        fwd, _ = cross_tile(buf, jnp.int32(half), need_bwd=False)
+        matches = merge_matches(matches, fwd)
+    # Send the caravan home: its rows belong to device (me - half).
+    home = jax.tree.map(
+        lambda x: lax.ppermute(x, axis_name, perm=_shift_perm(p, half)),
+        caravan,
+    )
+    return merge_matches(matches, home)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,87 @@ import jax
 import jax.numpy as jnp
 
 
+class BlockStats(NamedTuple):
+    """Per-row-block pruning summaries — the *index-build* half of pruning.
+
+    Everything the maxweight/minsize/inverted-index bounds need to know
+    about one side of a join, separated from the scoring-time mask
+    evaluation (:func:`live_tile_mask`) so a serving index can compute the
+    corpus side ONCE and reuse it across queries (``serving.index``).
+
+    Attributes:
+      maxw:    ``(nb, m)`` per-block per-dimension max ``|weight|`` — the
+               paper's ``maxweight_d(V)`` at tile granularity. ``maxw > 0``
+               is exactly the tile-granular posting-list support.
+      mw:      ``(nb,)`` per-block max weight (max of ``maxw`` over dims).
+      max_nnz: ``(nb,)`` per-block max row nnz (the paper's ``|y|``).
+    """
+
+    maxw: jax.Array
+    mw: jax.Array
+    max_nnz: jax.Array
+
+
+def dense_block_stats(D: jax.Array, block_rows: int, eps: float = 0.0) -> BlockStats:
+    """Block pruning summaries from a dense ``(n, m)`` array."""
+    maxw = block_maxweight_bounds(D, block_rows)
+    mw, max_nnz = block_minsize_bounds(D, block_rows, eps)
+    return BlockStats(maxw=maxw, mw=mw, max_nnz=max_nnz)
+
+
+def sparse_block_stats(sp, block_rows: int) -> BlockStats:
+    """Block pruning summaries straight from padded CSR (never densified).
+
+    ``max_nnz`` uses the corpus's EXACT stored per-row nnz (the dense path
+    has to recount from a densified array); stored nnz over-counts
+    duplicate coordinates, which only loosens (never unsounds) the minsize
+    bound.
+    """
+    maxw = sparse_block_maxweight(sp, block_rows)
+    max_nnz = jnp.max(sp.nnz.reshape(-1, block_rows), axis=1)
+    return BlockStats(maxw=maxw, mw=jnp.max(maxw, axis=1), max_nnz=max_nnz)
+
+
+def live_tile_mask(
+    stats_rows: BlockStats,
+    stats_cols: BlockStats,
+    threshold: jax.Array | float,
+    *,
+    use_minsize: bool = True,
+    normalized: bool = True,
+    return_ub: bool = False,
+):
+    """``(n_row_blocks, n_col_blocks)`` LIVE mask from precomputed stats.
+
+    The *scoring-time* half of pruning: a cheap summary matmul over
+    whatever :class:`BlockStats` the caller has — freshly computed (the
+    self-join paths) or prebuilt once per corpus (the serving index).
+    Semantics identical to :func:`block_prune_mask` /
+    :func:`sparse_block_prune_mask`, which are now thin wrappers.
+
+    The maxweight upper bound IS the inverted-index candidacy test in
+    weighted form: blocks sharing no posting list have ``ub = 0`` and die
+    for any ``t > 0``. ``normalized`` refers to the COLUMN side (the
+    minsize bound needs ``||y|| = 1``; query rows may be anything).
+
+    ``return_ub=True`` additionally returns the ``(nb_r, nb_c)`` f32 upper
+    bounds — the adaptive worklist ordering key (``compact_worklist``).
+    """
+    t = jnp.asarray(threshold, jnp.float32)
+    ub = block_upper_bounds(stats_rows.maxw, stats_cols.maxw)
+    live = ub >= t
+    if use_minsize and normalized:
+        ms_ub = (
+            stats_rows.mw[:, None]
+            * jnp.sqrt(stats_cols.max_nnz.astype(jnp.float32))[None, :]
+        )
+        live &= ms_ub >= t
+        ub = jnp.minimum(ub, ms_ub)
+    if return_ub:
+        return live, ub
+    return live
+
+
 def block_maxweight_bounds(D: jax.Array, block_rows: int) -> jax.Array:
     """Per-block, per-dimension max absolute weight: ``(n/b, m)``.
 
@@ -91,28 +172,28 @@ def block_prune_mask(
     *,
     use_minsize: bool = True,
     normalized: bool = True,
-) -> jax.Array:
+    return_ub: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     """``(n_row_blocks, n_col_blocks)`` bool mask; True = block pair is LIVE.
 
     A False entry certifies every pair in that tile has ``sim < t`` and may be
     skipped. Combines the maxweight bound with the (optional) minsize bound.
 
     ``D_rows`` are query rows, ``D_cols`` corpus rows (self-join: same array).
+    Thin wrapper over :func:`dense_block_stats` + :func:`live_tile_mask`
+    (the separable index-build / scoring-time halves).
     """
     block_cols = block_cols or block_rows
-    t = jnp.asarray(threshold, jnp.float32)
-
-    maxw_r = block_maxweight_bounds(D_rows, block_rows)
-    maxw_c = block_maxweight_bounds(D_cols, block_cols)
-    ub = block_upper_bounds(maxw_r, maxw_c)
-    live = ub >= t
-
-    if use_minsize and normalized:
-        mw_r, _ = block_minsize_bounds(D_rows, block_rows)
-        _, nnz_c = block_minsize_bounds(D_cols, block_cols)
-        ms_ub = mw_r[:, None] * jnp.sqrt(nnz_c.astype(jnp.float32))[None, :]
-        live &= ms_ub >= t
-    return live
+    stats_r = dense_block_stats(D_rows, block_rows)
+    stats_c = (
+        stats_r
+        if D_cols is D_rows and block_cols == block_rows
+        else dense_block_stats(D_cols, block_cols)
+    )
+    return live_tile_mask(
+        stats_r, stats_c, threshold,
+        use_minsize=use_minsize, normalized=normalized, return_ub=return_ub,
+    )
 
 
 class PruneStats(NamedTuple):
@@ -198,7 +279,8 @@ def sparse_block_prune_mask(
     *,
     use_minsize: bool = True,
     normalized: bool = True,
-) -> jax.Array:
+    return_ub: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     """``(n_row_blocks, n_col_blocks)`` LIVE mask from CSR inputs only.
 
     Conjunction of two exact certificates (False ⇒ no pair in the tile
@@ -223,23 +305,19 @@ def sparse_block_prune_mask(
 
     Both certificates are trivially live at ``t ≤ 0`` (their left sides are
     ≥ 0), where every pair — including zero-similarity ones — matches.
+    Thin wrapper over :func:`sparse_block_stats` + :func:`live_tile_mask`.
     """
     block_cols = block_cols or block_rows
-    t = jnp.asarray(threshold, jnp.float32)
-    maxw_r = sparse_block_maxweight(sp_rows, block_rows)
-    maxw_c = (
-        maxw_r  # self-join: skip the second dedupe + scatter-max pass
+    stats_r = sparse_block_stats(sp_rows, block_rows)
+    stats_c = (
+        stats_r  # self-join: skip the second dedupe + scatter-max pass
         if sp_cols is sp_rows and block_cols == block_rows
-        else sparse_block_maxweight(sp_cols, block_cols)
+        else sparse_block_stats(sp_cols, block_cols)
     )
-    live = block_upper_bounds(maxw_r, maxw_c) >= t
-    if use_minsize and normalized:
-        mw_r = jnp.max(maxw_r, axis=1)
-        max_nnz_c = jnp.max(
-            sp_cols.nnz.reshape(-1, block_cols), axis=1
-        ).astype(jnp.float32)
-        live &= mw_r[:, None] * jnp.sqrt(max_nnz_c)[None, :] >= t
-    return live
+    return live_tile_mask(
+        stats_r, stats_c, threshold,
+        use_minsize=use_minsize, normalized=normalized, return_ub=return_ub,
+    )
 
 
 def local_threshold(threshold: float | jax.Array, num_shards: int) -> jax.Array:

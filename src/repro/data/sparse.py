@@ -66,6 +66,38 @@ def sparse_zipfian_corpus(
     return _finish(indices, values, nnz, m)
 
 
+def perturbed_queries(
+    sp: SparseCorpus,
+    nq: int,
+    *,
+    noise: float = 0.02,
+    start: int | None = None,
+    seed: int = 1,
+) -> np.ndarray:
+    """Dense query batch: perturbed rows from one contiguous corpus range.
+
+    The serving benchmark/demo traffic model — near-duplicate, topical
+    queries (the regime where a prebuilt inverted index prunes hardest).
+    Rows ``[start, start+nq)`` are densified, their nonzeros jittered by
+    ``noise``, and the batch L2-renormalized. Returns ``(nq, m)`` f32.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.apss import normalize_rows
+    from repro.core.sparse import densify_rows
+
+    rng = np.random.default_rng(seed)
+    if start is None:
+        start = int(rng.integers(0, max(1, sp.n - nq)))
+    qd = np.asarray(densify_rows(sp, start, min(nq, sp.n)))
+    if qd.shape[0] < nq:  # tiny corpora: repeat rows to fill the batch
+        reps = -(-nq // qd.shape[0])
+        qd = np.tile(qd, (reps, 1))[:nq]
+    jitter = noise * np.abs(rng.standard_normal(qd.shape)).astype(np.float32)
+    qd = qd + jitter * (qd > 0)
+    return np.asarray(normalize_rows(jnp.asarray(qd)))
+
+
 def sparse_clustered_corpus(
     n: int,
     m: int,

@@ -165,6 +165,32 @@ def _tile_packets(
     return fv, fi, fc, bv, bi, bc
 
 
+def _rect_tile_packets(
+    s, jb, *, threshold: float, k: int, block_q: int, block_c: int,
+    nc_valid: int, topk=_merge_topk,
+):
+    """One rectangular (query-block × corpus-block) tile's candidate packet.
+
+    The asymmetric sibling of :func:`_tile_packets` for the serving path
+    (``serving.query``): queries are NOT corpus members, so there is no
+    self-pair to exclude and no S = Sᵀ mirror to emit — forward packets
+    only. Column validity (``gcol < nc_valid``) masks corpus row padding;
+    query-row padding needs no masking here because padded rows are sliced
+    off after the fold (per-row results are independent).
+
+    Returns ``(fv (block_q, k), fi (block_q, k), fc (block_q, 1))``.
+    """
+    gcol = jb * block_c + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = (s >= jnp.float32(threshold)) & (gcol < nc_valid)
+    empty_v, empty_i = _empty_buffers(block_q, k)
+    fv, fi = topk(
+        empty_v, empty_i,
+        jnp.where(ok, s, NEG_LARGE), jnp.where(ok, gcol, -1), k,
+    )
+    fc = jnp.sum(ok, axis=1, keepdims=True, dtype=jnp.int32)
+    return fv, fi, fc
+
+
 # ---------------------------------------------------------------------------
 # Kernel 1: streaming fused extraction, (i, j, kf) grid
 # ---------------------------------------------------------------------------
@@ -371,6 +397,115 @@ def _tile_cand_kernel(
         bv_ref[0] = bv
         bi_ref[0] = bi
         bc_ref[0] = bc
+
+
+def _rect_cand_kernel(
+    ij_ref,     # scalar-prefetch (2, T) i32 — live (qi, cj) tile coordinates
+    x_ref,      # (bq, bk) query tile
+    y_ref,      # (bc, bk) corpus tile
+    fv_ref,     # out (1, bq, k) f32
+    fi_ref,     # out (1, bq, k) i32
+    fc_ref,     # out (1, bq, 1) i32
+    acc_ref,    # scratch (bq, bc) f32
+    *,
+    threshold: float,
+    k: int,
+    block_q: int,
+    block_c: int,
+    nc_valid: int,
+):
+    t = pl.program_id(0)
+    kf = pl.program_id(1)
+    nkf = pl.num_programs(1)
+
+    @pl.when(kf == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kf == nkf - 1)
+    def _emit():
+        fv, fi, fc = _rect_tile_packets(
+            acc_ref[...], ij_ref[1, t],
+            threshold=threshold, k=k, block_q=block_q, block_c=block_c,
+            nc_valid=nc_valid,
+        )
+        fv_ref[0] = fv
+        fi_ref[0] = fi
+        fc_ref[0] = fc
+
+
+def rect_tile_candidates_pallas(
+    Q: jax.Array,
+    C: jax.Array,
+    ij: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_q: int = 128,
+    block_c: int = 256,
+    block_k: int = 512,
+    nc_valid: int,
+    interpret: bool = False,
+):
+    """Per-live-tile forward packets for the rectangular (serving) join.
+
+    The query-time analogue of :func:`apss_tile_candidates_pallas`: ``ij``
+    is the dense ``(2, T)`` worklist of live ``(query_block, corpus_block)``
+    coordinates — no upper-triangular structure, no mirror packets (queries
+    aren't corpus rows). The serving path bucket-pads ``T`` to a power of
+    two so repeat queries never retrace; padding entries are masked at fold
+    time (``ops.fold_rect_packets``), so the kernel just computes them.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    nq, m = Q.shape
+    nc, m2 = C.shape
+    assert m == m2, (m, m2)
+    assert nq % block_q == 0 and nc % block_c == 0, (nq, nc, block_q, block_c)
+    assert m % block_k == 0, (m, block_k)
+    T = ij.shape[1]
+    assert ij.shape == (2, T)
+    nkf = m // block_k
+
+    kernel = functools.partial(
+        _rect_cand_kernel,
+        threshold=threshold, k=k, block_q=block_q, block_c=block_c,
+        nc_valid=nc_valid,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, nkf),
+        in_specs=[
+            pl.BlockSpec((block_q, block_k), lambda t, kf, ij: (ij[0, t], kf)),
+            pl.BlockSpec((block_c, block_k), lambda t, kf, ij: (ij[1, t], kf)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_q, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda t, kf, ij: (t, 0, 0)),
+        ],
+        scratch_shapes=[vmem((block_q, block_c), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, block_q, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, block_q, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, block_q, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(ij.astype(jnp.int32), Q, C)
 
 
 def apss_tile_candidates_pallas(

@@ -192,7 +192,7 @@ def _merge_packet(cv, ci, cc, blk, pv, pi, pc, k: int):
     return cv, ci, cc
 
 
-def compact_worklist(mask) -> np.ndarray | None:
+def compact_worklist(mask, ub=None) -> np.ndarray | None:
     """Host-side live-mask → dense upper-triangular worklist ``(2, T)``.
 
     Symmetrizes first (the minsize bound is asymmetric: a pair is live if
@@ -200,13 +200,96 @@ def compact_worklist(mask) -> np.ndarray | None:
     tile is computed once for both orientations (S = Sᵀ). Returns None when
     nothing is live. Shared by the dense and sparse compacted paths so the
     exactness-critical mirror convention lives in one place.
+
+    ``ub`` (``(nb, nb)`` f32 tile upper bounds, as returned by
+    ``core.pruning.live_tile_mask(return_ub=True)``) enables the paper's
+    maxweight **adaptive ordering**: live tiles are sorted by upper bound
+    descending, so the tiles most likely to carry matches run first and
+    any future early-exit threshold tightens fastest while the worklist
+    drains. Results are order-invariant (each tile's packet is folded into
+    an exact running top-k — asserted by ``tests/test_apss_fused.py``);
+    ordering only shifts WHERE the matches are found early.
     """
     live = np.asarray(mask)
     live = np.triu(live | live.T)
     iu, ju = np.nonzero(live)
     if iu.size == 0:
         return None
+    if ub is not None:
+        u = np.asarray(ub, np.float64)
+        u = np.maximum(u, u.T)  # match the symmetrized liveness
+        order = np.argsort(-u[iu, ju], kind="stable")
+        iu, ju = iu[order], ju[order]
     return np.stack([iu, ju]).astype(np.int32)
+
+
+def compact_rect_worklist(mask, ub=None) -> np.ndarray | None:
+    """Host-side live-mask → dense rectangular worklist ``(2, T)``.
+
+    The serving-path sibling of :func:`compact_worklist`: no symmetry, no
+    triangular cut — every live ``(query_block, corpus_block)`` tile is
+    listed once. Same optional upper-bound descending order.
+    """
+    live = np.asarray(mask)
+    iu, ju = np.nonzero(live)
+    if iu.size == 0:
+        return None
+    if ub is not None:
+        order = np.argsort(-np.asarray(ub, np.float64)[iu, ju], kind="stable")
+        iu, ju = iu[order], ju[order]
+    return np.stack([iu, ju]).astype(np.int32)
+
+
+def pad_worklist(wl: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Bucket-pad a ``(2, T)`` worklist to the next power of two.
+
+    Serving calls see a different live-tile count per query batch; without
+    bucketing every new ``T`` would retrace (and recompile) the jitted
+    scoring path. Padding entries repeat tile ``(0, 0)`` (always valid
+    memory) and are masked out of the fold by the returned ``(Tb,)`` bool
+    validity vector — so the amortized trace count is O(log live-tiles),
+    not O(distinct worklist lengths).
+    """
+    T = wl.shape[1]
+    Tb = 1 << max(0, (T - 1).bit_length())
+    valid = np.zeros((Tb,), bool)
+    valid[:T] = True
+    if Tb == T:
+        return wl, valid
+    pad = np.zeros((2, Tb - T), np.int32)
+    return np.concatenate([wl, pad], axis=1), valid
+
+
+def fold_rect_packets(ij, tvalid, fv, fi, fc, *, grid_q, block_q, k):
+    """XLA scan folding rectangular forward packets into flat buffers.
+
+    The serving twin of :func:`fold_packets`: forward packets only (no
+    mirror — queries aren't corpus rows), plus a ``(T,)`` validity mask for
+    bucket padding (``pad_worklist``): invalid entries are neutralized
+    (values → −∞, ids → −1, counts → 0) BEFORE the merge so a padding
+    entry that aliases a real tile can never double-count.
+    """
+    dead = ~tvalid
+    fv = jnp.where(dead[:, None, None], NEG_INF, fv)
+    fi = jnp.where(dead[:, None, None], -1, fi)
+    fc = jnp.where(dead[:, None], 0, fc)
+
+    def step(carry, inp):
+        cv, ci, cc = carry
+        ib, fv_t, fi_t, fc_t = inp
+        cv, ci, cc = _merge_packet(cv, ci, cc, ib, fv_t, fi_t, fc_t, k)
+        return (cv, ci, cc), None
+
+    carry0 = (
+        jnp.full((grid_q, block_q, k), -jnp.inf, jnp.float32),
+        jnp.full((grid_q, block_q, k), -1, jnp.int32),
+        jnp.zeros((grid_q, block_q), jnp.int32),
+    )
+    (cv, ci, cc), _ = jax.lax.scan(step, carry0, (ij[0], fv, fi, fc))
+    values = jnp.where(ci >= 0, cv, NEG_INF).reshape(grid_q * block_q, k)
+    indices = ci.reshape(grid_q * block_q, k)
+    counts = cc.reshape(grid_q * block_q)
+    return values, indices, counts
 
 
 def fold_packets(ij, fv, fi, fc, bv, bi, bc, *, grid_m, block_m, k):
@@ -290,10 +373,11 @@ def apss_fused_compacted(
     Dp = _pad_to(D, block_m, bk)
     grid_m = Dp.shape[0] // block_m
 
-    mask = block_prune_mask(
-        Dp, Dp, threshold, block_m, block_m, use_minsize=use_minsize
+    mask, ub = block_prune_mask(
+        Dp, Dp, threshold, block_m, block_m, use_minsize=use_minsize,
+        return_ub=True,
     )
-    wl = compact_worklist(mask)
+    wl = compact_worklist(mask, ub)
     if wl is None:
         return empty_matches(n, k)
     ij = jnp.asarray(wl)

@@ -47,7 +47,11 @@ from repro.core.matches import Matches, empty_matches
 from repro.core.pruning import sparse_block_prune_mask
 from repro.core.sparse import SparseCorpus, pad_rows_sparse
 from repro.kernels._compat import tpu_compiler_params
-from repro.kernels.apss_block.fused import _tile_packets, _topk_sort
+from repro.kernels.apss_block.fused import (
+    _rect_tile_packets,
+    _tile_packets,
+    _topk_sort,
+)
 from repro.kernels.apss_block.ops import _on_tpu, compact_worklist, fold_packets
 
 
@@ -209,6 +213,101 @@ def sparse_tile_candidates_pallas(
     )(ij.astype(jnp.int32), bx, yg)
 
 
+def _rect_sparse_tile_kernel(
+    ij_ref,     # scalar-prefetch (2, T) i32 — live (qi, cj) tile coordinates
+    qg_ref,     # (1, bq, S) — query block gathered onto the corpus support
+    bx_ref,     # (1, bm, S) — corpus block densified on its own support
+    fv_ref,     # out (1, bq, k) f32
+    fi_ref,     # out (1, bq, k) i32
+    fc_ref,     # out (1, bq, 1) i32
+    *,
+    threshold: float,
+    k: int,
+    block_q: int,
+    block_c: int,
+    nc_valid: int,
+):
+    t = pl.program_id(0)
+    s = jax.lax.dot_general(
+        qg_ref[0],
+        bx_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    fv, fi, fc = _rect_tile_packets(
+        s, ij_ref[1, t],
+        threshold=threshold, k=k, block_q=block_q, block_c=block_c,
+        nc_valid=nc_valid,
+    )
+    fv_ref[0] = fv
+    fi_ref[0] = fi
+    fc_ref[0] = fc
+
+
+def rect_sparse_tile_candidates_pallas(
+    qg: jax.Array,
+    bx: jax.Array,
+    ij: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_q: int,
+    block_c: int,
+    nc_valid: int,
+    interpret: bool = False,
+):
+    """Rectangular (query × sparse-corpus) per-live-tile forward packets.
+
+    The serving twin of :func:`sparse_tile_candidates_pallas`: scoring a
+    dense query block against a CSR corpus block reduces to the dense tile
+    contraction ``qg · bxᵀ`` over the corpus block's OWN support — exact
+    because every corpus nonzero lies inside its block support and query
+    components outside it multiply stored zeros. ``qg (T, bq, S)`` is
+    per-worklist-tile (the query rows' components at ``bdims[cj]``,
+    gathered in XLA); ``bx (nb, bm, S)`` rides the scalar-prefetched
+    corpus-block index. Forward packets only — no mirror, no self-pairs.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    nb, bm, S = bx.shape
+    T = ij.shape[1]
+    assert qg.shape == (T, block_q, S), (qg.shape, (T, block_q, S))
+    assert bm == block_c, (bm, block_c)
+    assert ij.shape == (2, T)
+
+    kernel = functools.partial(
+        _rect_sparse_tile_kernel,
+        threshold=threshold, k=k, block_q=block_q, block_c=block_c,
+        nc_valid=nc_valid,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, block_q, S), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_c, S), lambda t, ij: (ij[1, t], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, k), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_q, k), lambda t, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda t, ij: (t, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, block_q, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, block_q, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, block_q, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(ij.astype(jnp.int32), qg, bx)
+
+
 # ---------------------------------------------------------------------------
 # The jitted inner: gather → score → packets (XLA scan or Pallas kernel)
 # ---------------------------------------------------------------------------
@@ -268,6 +367,7 @@ def apss_sparse_compacted(
     *,
     block_m: int = 256,
     block_mask: jax.Array | None = None,
+    block_ub: jax.Array | None = None,
     use_minsize: bool = True,
     use_kernel: bool = False,
     interpret: bool | None = None,
@@ -277,14 +377,16 @@ def apss_sparse_compacted(
 
     The sparse twin of ``ops.apss_fused_compacted``: the live mask comes
     from CSR-only bounds (inverted-index candidacy included), the worklist
-    is host-compacted (upper-triangular, S = Sᵀ mirrors), and each live
-    tile costs ``O(bm² · S)`` instead of ``O(bm² · m)``. ``use_kernel``
-    selects the Pallas worklist kernel (TPU; interpret off-TPU) over the
-    jitted XLA scan. Host compaction makes the entry non-traceable — same
-    contract as the dense compacted path. ``block_mask`` (``(nb, nb)``
-    LIVE bools over the row-padded corpus) skips the internal bound
-    computation when the caller already has it (same convention as the
-    dense ``apss_fused``); it must be conservative or exactness is lost.
+    is host-compacted (upper-triangular, S = Sᵀ mirrors, upper-bound
+    ordered), and each live tile costs ``O(bm² · S)`` instead of
+    ``O(bm² · m)``. ``use_kernel`` selects the Pallas worklist kernel
+    (TPU; interpret off-TPU) over the jitted XLA scan. Host compaction
+    makes the entry non-traceable — same contract as the dense compacted
+    path. ``block_mask`` (``(nb, nb)`` LIVE bools over the row-padded
+    corpus) skips the internal bound computation when the caller already
+    has it (same convention as the dense ``apss_fused``); it must be
+    conservative or exactness is lost. ``block_ub`` optionally carries the
+    matching tile upper bounds for the adaptive worklist ordering.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -292,14 +394,14 @@ def apss_sparse_compacted(
     spp, _ = pad_rows_sparse(sp, block_m)
     grid_m = spp.n // block_m
 
-    mask = (
-        block_mask
-        if block_mask is not None
-        else sparse_block_prune_mask(
-            spp, spp, threshold, block_m, use_minsize=use_minsize
+    if block_mask is not None:
+        mask, ub = block_mask, block_ub
+    else:
+        mask, ub = sparse_block_prune_mask(
+            spp, spp, threshold, block_m, use_minsize=use_minsize,
+            return_ub=True,
         )
-    )
-    wl = compact_worklist(mask)
+    wl = compact_worklist(mask, ub)
     if wl is None:
         return empty_matches(n, k)
     ij = jnp.asarray(wl)

@@ -1,8 +1,19 @@
-"""Serving entry point: batched request loop over prefill/decode (LM) or
-score/retrieve (recsys) with request batching and per-request latching.
+"""Serving entry point: batched request loops with per-request latching.
 
-CPU-scale demo (reduced configs):
+Two modes:
+
+- ``--mode lm`` (default): continuous-batch LM decode over the transformer
+  stack (:class:`LMServer`).
+- ``--mode retrieval``: the APSS serving path — build a
+  :class:`~repro.serving.index.APSSIndex` ONCE over a synthetic sparse
+  corpus, then stream query batches through a
+  :class:`~repro.serving.server.RetrievalServer` (one jit'd ``query_topk``
+  per step boundary, LRU cache, per-query latency/QPS report).
+
+CPU-scale demos (reduced configs):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --requests 4
+    PYTHONPATH=src python -m repro.launch.serve --mode retrieval \\
+        --corpus-n 4096 --corpus-m 2048 --requests 64 --batch 8
 """
 
 from __future__ import annotations
@@ -70,12 +81,69 @@ class LMServer:
         return self.outputs[slot][-n:]
 
 
+def run_retrieval(args) -> None:
+    """Retrieval mode: index once, serve query batches, report QPS."""
+    from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.serving import RetrievalServer, build_index
+
+    t0 = time.time()
+    sp = sparse_clustered_corpus(
+        args.corpus_n, args.corpus_m, args.avg_nnz, n_clusters=16, seed=0
+    )
+    t_gen = time.time() - t0
+
+    t0 = time.time()
+    index = build_index(sp, block_rows=args.block, normalize=False)
+    t_build = time.time() - t0
+
+    # Perturbed corpus rows: realistic near-duplicate, topical traffic.
+    qs = list(perturbed_queries(sp, args.requests, seed=1))
+
+    def make_server():
+        return RetrievalServer(
+            index, threshold=args.threshold, k=args.k, max_batch=args.batch
+        )
+
+    # Warm up compile caches on a THROWAWAY server (the jitted scoring
+    # paths are module-level, so compilation carries over), then time a
+    # fresh one — otherwise the warmup batch sits in the LRU cache and
+    # inflates the measured QPS.
+    make_server().serve(qs[: args.batch])
+    srv = make_server()
+    t0 = time.time()
+    results = srv.serve(qs)
+    dt = time.time() - t0
+    n_match = sum(r.count for r in results)
+    print(
+        f"[serve] corpus n={sp.n} m={sp.m} (gen {t_gen:.1f}s) "
+        f"index build {t_build:.2f}s"
+    )
+    print(
+        f"[serve] {len(results)} queries in {dt:.3f}s "
+        f"({len(results)/dt:.1f} QPS, batch {args.batch}, "
+        f"{1e3*dt/len(results):.2f} ms/query), {n_match} matches, "
+        f"stats={srv.stats}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "retrieval"], default="lm")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--gen-tokens", type=int, default=8)
+    ap.add_argument("--corpus-n", type=int, default=4096)
+    ap.add_argument("--corpus-m", type=int, default=2048)
+    ap.add_argument("--avg-nnz", type=float, default=16.0)
+    ap.add_argument("--block", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--k", type=int, default=16)
     args = ap.parse_args()
+
+    if args.mode == "retrieval":
+        run_retrieval(args)
+        return
 
     from repro.configs import get_arch
 

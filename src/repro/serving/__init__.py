@@ -1,0 +1,25 @@
+"""Online retrieval serving: build-once APSS index + query-time top-k.
+
+The paper's kernel is the symmetric all-pairs self-join, but its essential
+machinery — partial indexing, maxweight pruning, posting-list candidate
+generation — is exactly what an online retrieval server needs when the
+corpus is fixed and queries stream in. This package amortizes all of it:
+
+- :mod:`repro.serving.index`  — :class:`APSSIndex`: every support structure
+  (normalized padded CSR, block maxweight vectors, tile-granular posting
+  lists, ``bdims``/``bx`` support compaction, minsize bounds) built ONCE
+  per corpus, optionally ``device_put``-sharded across a mesh.
+- :mod:`repro.serving.query`  — :func:`query_topk`: the rectangular
+  (queries × corpus) pruned scoring path; candidates from the prebuilt
+  inverted index, query-side maxweight pruning against precomputed corpus
+  block maxima, live tiles only, no index rebuild inside jit.
+- :mod:`repro.serving.server` — :class:`RetrievalServer`: request batching
+  at step boundaries, one jit'd ``query_topk`` per step, sharded partial
+  merge, LRU result cache.
+
+See DESIGN.md §6 for the index layout and the amortization model.
+"""
+
+from repro.serving.index import APSSIndex, build_index  # noqa: F401
+from repro.serving.query import query_topk  # noqa: F401
+from repro.serving.server import RetrievalResult, RetrievalServer  # noqa: F401

@@ -1,0 +1,364 @@
+"""query_topk: rectangular pruned scoring against a prebuilt APSSIndex.
+
+The self-join scoring paths rebuild ``bdims``/``bx`` supports and pruning
+bounds on every call; this module is the query-time half of the split:
+per call it computes ONLY the query-side block stats (one cheap summary
+pass over the padded batch), evaluates the paper's maxweight + minsize
+bounds against the index's precomputed corpus block maxima — which is the
+inverted-index candidacy test in weighted form, so candidates come from
+the prebuilt posting-list supports — and scores exactly the live
+``(query_block, corpus_block)`` tiles through a rectangular generalization
+of the fused/compacted worklist path (Pallas kernel on TPU, XLA scan
+fallback elsewhere). No n×n symmetry assumption anywhere: no mirror
+packets, no self-pair exclusion, no triangular worklist cut.
+
+Retrace discipline (the server's hot loop must not recompile):
+
+- every index structure enters the jit'd inners as pytree ARGUMENTS —
+  nothing corpus-sized is rebuilt or re-traced per call,
+- the live-tile worklist is bucket-padded to a power of two
+  (``ops.pad_worklist``) so varying live-tile counts reuse compiled code,
+- ``TRACE_COUNTS`` increments at trace time only; ``tests/test_serving.py``
+  asserts a second query adds zero traces.
+
+Sharded indexes (``build_index(mesh=...)``) take the per-shard path: one
+``shard_map`` scores the replicated query batch against each device's
+corpus rows (global column ids via the shard offset), per-shard top-k
+partials come back stacked, and the host merges them (``merge_matches``
+over disjoint column ranges — exact).
+"""
+
+from __future__ import annotations
+
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import pvary, shard_map
+from repro.core.matches import (
+    Matches,
+    empty_matches,
+    extract_matches,
+    merge_matches,
+)
+from repro.core.pruning import dense_block_stats, live_tile_mask
+from repro.core.sparse import SparseCorpus, gather_dot, to_dense
+from repro.kernels.apss_block.fused import (
+    _rect_tile_packets,
+    _topk_sort,
+    rect_tile_candidates_pallas,
+)
+from repro.kernels.apss_block.ops import (
+    _on_tpu,
+    _pick_bk,
+    compact_rect_worklist,
+    fold_rect_packets,
+    pad_worklist,
+)
+from repro.kernels.apss_block.sparse import rect_sparse_tile_candidates_pallas
+from repro.serving.index import APSSIndex
+
+# Trace-time counters (Python side effects run only when jit re-traces).
+# The serving contract is "build once, query many": after the first call of
+# a given shape, these must not move — asserted by tests/test_serving.py.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def query_topk(
+    index: APSSIndex,
+    Q,
+    threshold: float,
+    k: int = 32,
+    *,
+    block_q: int = 128,
+    use_kernel: bool = False,
+    use_minsize: bool = True,
+    interpret: bool | None = None,
+) -> Matches:
+    """Top-k corpus neighbors ≥ ``threshold`` for a batch of queries.
+
+    ``Q`` is ``(B, m)`` dense (a :class:`SparseCorpus` batch is densified —
+    query batches are small) and is scored AS GIVEN (no normalization here;
+    the server normalizes on ingest). Returns :class:`Matches` with global
+    corpus row ids; exact vs the brute-force rectangular oracle
+    (``extract_matches(Q @ Cᵀ, t, k, exclude_self=False)``) at every
+    threshold, including ``t ≤ 0``, because pruned tiles are provably
+    matchless (``core.pruning``).
+
+    The live worklist is compacted host-side (same contract as
+    ``apss_fused_compacted``), ordered by upper bound descending, and
+    bucket-padded so repeat calls hit the jit cache. ``use_kernel`` routes
+    tile scoring through the rectangular Pallas kernels (TPU; interpret
+    off-TPU); the default XLA scan is the production path off-TPU.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if isinstance(Q, SparseCorpus):
+        if Q.m != index.m:
+            raise ValueError(f"dimension mismatch: Q.m={Q.m} vs index m={index.m}")
+        Q = to_dense(Q)
+    Q = jnp.asarray(Q)
+    if Q.ndim != 2 or Q.shape[1] != index.m:
+        raise ValueError(f"Q must be (B, {index.m}); got {Q.shape}")
+    B = Q.shape[0]
+    if not index.is_sparse:
+        # Dense corpora are lane-padded once at build time; match the
+        # query batch (query-sized work) so the jitted inners see aligned
+        # operands and never re-pad the corpus.
+        remk = index.corpus.shape[1] - index.m
+        if remk:
+            Q = jnp.pad(Q, ((0, 0), (0, remk)))
+
+    if index.mesh is not None:
+        if use_kernel:
+            raise NotImplementedError(
+                "sharded query path scores with the XLA blocked scorer "
+                "(per-shard column validity); use_kernel applies to "
+                "single-host indexes"
+            )
+        # No block_q row padding here: the per-shard scorer tiles by the
+        # index's block_rows, so padding would only add dead scored rows.
+        out = _sharded_query(
+            Q, index.corpus,
+            mesh=index.mesh, axis_name=index.axis_name, kind=index.kind,
+            threshold=float(threshold), k=k,
+            block_rows=index.block_rows, n_valid=index.n,
+        )
+        parts = [jax.tree.map(lambda x: x[i], out) for i in range(out.counts.shape[0])]
+        return functools.reduce(merge_matches, parts)
+
+    rem = (-B) % block_q
+    Qp = jnp.pad(Q, ((0, rem), (0, 0))) if rem else Q
+    grid_q = Qp.shape[0] // block_q
+    mask, ub = _query_mask(
+        Qp, index.stats, threshold=float(threshold), block_q=block_q,
+        use_minsize=use_minsize, normalized=index.normalized,
+    )
+    wl = compact_rect_worklist(np.asarray(mask), np.asarray(ub))
+    if wl is None:
+        return empty_matches(B, k)
+    ij, tvalid = pad_worklist(wl)
+    ij, tvalid = jnp.asarray(ij), jnp.asarray(tvalid)
+
+    if index.is_sparse:
+        values, indices, counts = _rect_sparse_inner(
+            Qp, index.bdims, index.bx, ij, tvalid,
+            threshold=float(threshold), k=k, block_q=block_q,
+            block_c=index.block_rows, nc_valid=index.n, grid_q=grid_q,
+            use_kernel=use_kernel, interpret=interpret,
+        )
+    else:
+        values, indices, counts = _rect_dense_inner(
+            Qp, index.corpus, ij, tvalid,
+            threshold=float(threshold), k=k, block_q=block_q,
+            block_c=index.block_rows, nc_valid=index.n, grid_q=grid_q,
+            use_kernel=use_kernel, interpret=interpret,
+        )
+    return Matches(values=values[:B], indices=indices[:B], counts=counts[:B])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("threshold", "block_q", "use_minsize", "normalized"),
+)
+def _query_mask(Qp, corpus_stats, *, threshold, block_q, use_minsize, normalized):
+    """Query-side block stats + live mask vs PREBUILT corpus stats.
+
+    The only per-call bound computation: ``O(B·m)`` for the query summary
+    and one ``(B/bq × nb)`` matmul for the upper bounds. Corpus-side stats
+    arrive as index leaves — never recomputed here.
+    """
+    TRACE_COUNTS["query_mask"] += 1
+    qstats = dense_block_stats(Qp.astype(jnp.float32), block_q)
+    return live_tile_mask(
+        qstats, corpus_stats, threshold,
+        use_minsize=use_minsize, normalized=normalized, return_ub=True,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "k", "block_q", "block_c", "nc_valid", "grid_q",
+        "use_kernel", "interpret",
+    ),
+)
+def _rect_dense_inner(
+    Qp, C, ij, tvalid, *,
+    threshold, k, block_q, block_c, nc_valid, grid_q, use_kernel, interpret,
+):
+    """Score live rectangular tiles of a DENSE index; fold to Matches."""
+    TRACE_COUNTS["dense_inner"] += 1
+    m = Qp.shape[1]
+    if use_kernel:
+        bk = _pick_bk(m, 512)
+        padk = (-m) % bk
+        Qk = jnp.pad(Qp, ((0, 0), (0, padk))) if padk else Qp
+        Ck = jnp.pad(C, ((0, 0), (0, padk))) if padk else C
+        fv, fi, fc = rect_tile_candidates_pallas(
+            Qk, Ck, ij, threshold, k,
+            block_q=block_q, block_c=block_c, block_k=bk,
+            nc_valid=nc_valid, interpret=interpret,
+        )
+    else:
+        Qb = Qp.reshape(grid_q, block_q, m)
+        Cb = C.reshape(-1, block_c, m)
+
+        def tile(_, t):
+            s = jnp.einsum(
+                "qm,cm->qc", Qb[ij[0, t]], Cb[ij[1, t]],
+                preferred_element_type=jnp.float32,
+            )
+            return _, _rect_tile_packets(
+                s, ij[1, t], threshold=threshold, k=k,
+                block_q=block_q, block_c=block_c, nc_valid=nc_valid,
+                topk=_topk_sort,
+            )
+
+        _, (fv, fi, fc) = lax.scan(tile, 0, jnp.arange(ij.shape[1]))
+    return fold_rect_packets(
+        ij, tvalid, fv, fi, fc[..., 0], grid_q=grid_q, block_q=block_q, k=k
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "threshold", "k", "block_q", "block_c", "nc_valid", "grid_q",
+        "use_kernel", "interpret",
+    ),
+)
+def _rect_sparse_inner(
+    Qp, bdims, bx, ij, tvalid, *,
+    threshold, k, block_q, block_c, nc_valid, grid_q, use_kernel, interpret,
+):
+    """Score live rectangular tiles of a SPARSE index; fold to Matches.
+
+    Per live tile ``(qi, cj)``: the query block's components at the corpus
+    block's support dims (``bdims[cj]``) are gathered — the sentinel pad
+    ``m`` hits an appended zero column — and contracted against the
+    support-densified corpus block ``bx[cj]``. Exact, because every corpus
+    nonzero lies inside its own block support (DESIGN.md §5/§6); MXU work
+    is ``O(bq · bm · S)``, never ``O(bq · bm · m)``.
+    """
+    TRACE_COUNTS["sparse_inner"] += 1
+    Qext = jnp.pad(Qp.astype(jnp.float32), ((0, 0), (0, 1)))
+    Qb = Qext.reshape(grid_q, block_q, -1)
+
+    def gather_t(t):
+        return jnp.take(Qb[ij[0, t]], bdims[ij[1, t]], axis=1)  # (bq, S)
+
+    if use_kernel:
+        _, qg = lax.scan(
+            lambda _, t: (_, gather_t(t)), 0, jnp.arange(ij.shape[1])
+        )
+        fv, fi, fc = rect_sparse_tile_candidates_pallas(
+            qg, bx, ij, threshold, k,
+            block_q=block_q, block_c=block_c, nc_valid=nc_valid,
+            interpret=interpret,
+        )
+    else:
+
+        def tile(_, t):
+            s = jnp.einsum(
+                "qs,cs->qc", gather_t(t), bx[ij[1, t]],
+                preferred_element_type=jnp.float32,
+            )
+            return _, _rect_tile_packets(
+                s, ij[1, t], threshold=threshold, k=k,
+                block_q=block_q, block_c=block_c, nc_valid=nc_valid,
+                topk=_topk_sort,
+            )
+
+        _, (fv, fi, fc) = lax.scan(tile, 0, jnp.arange(ij.shape[1]))
+    return fold_rect_packets(
+        ij, tvalid, fv, fi, fc[..., 0], grid_q=grid_q, block_q=block_q, k=k
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded per-shard scoring (mesh-placed indexes)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "axis_name", "kind", "threshold", "k", "block_rows",
+        "n_valid",
+    ),
+)
+def _sharded_query(
+    Qp, corpus, *, mesh, axis_name, kind, threshold, k, block_rows, n_valid
+):
+    """One shard_map: replicated queries × per-device corpus row shard.
+
+    Returns per-shard partial Matches STACKED on a leading ``(p,)`` axis —
+    the caller merges them host-side (the partials' column ranges are
+    disjoint by construction, so ``merge_matches`` is exact). Column
+    validity is evaluated against GLOBAL row ids, so corpus padding rows
+    (which live only in the last shard) never match.
+    """
+    TRACE_COUNTS["sharded_query"] += 1
+
+    def dense_body(Qr, C_loc):
+        from repro.core.apss import similarity_topk
+
+        nc_loc = C_loc.shape[0]
+        col_off = lax.axis_index(axis_name) * nc_loc
+        ids = jnp.arange(nc_loc, dtype=jnp.int32) + col_off
+        mm = similarity_topk(
+            Qr, C_loc, threshold, k,
+            block_rows=min(block_rows, Qr.shape[0]),
+            exclude_self=False, col_offset=col_off, col_valid=ids < n_valid,
+        )
+        return jax.tree.map(lambda x: x[None], mm)
+
+    def sparse_body(Qr, idxL, valL, nnzL):
+        del nnzL  # scoring sums every (0-padded) slot; nnz not needed
+        nc_loc, cap = idxL.shape
+        bm = min(block_rows, nc_loc)
+        ncb = nc_loc // bm
+        col_off = lax.axis_index(axis_name) * nc_loc
+        Ci = idxL.reshape(ncb, bm, cap)
+        Cv = valL.reshape(ncb, bm, cap)
+
+        def c_block(mm, ci):
+            s = gather_dot(Qr.astype(jnp.float32), Ci[ci], Cv[ci])
+            ids = jnp.arange(bm, dtype=jnp.int32) + col_off + ci * bm
+            m_new = extract_matches(
+                s, threshold, k, col_offset=col_off + ci * bm,
+                exclude_self=False, col_valid=ids < n_valid,
+            )
+            return merge_matches(mm, m_new), None
+
+        mm0 = jax.tree.map(
+            lambda x: pvary(x, axis_name), empty_matches(Qr.shape[0], k)
+        )
+        mm, _ = lax.scan(c_block, mm0, jnp.arange(ncb))
+        return jax.tree.map(lambda x: x[None], mm)
+
+    stacked = Matches(
+        values=P(axis_name, None, None),
+        indices=P(axis_name, None, None),
+        counts=P(axis_name, None),
+    )
+    if kind == "dense":
+        return shard_map(
+            dense_body, mesh=mesh,
+            in_specs=(P(None, None), P(axis_name, None)),
+            out_specs=stacked, check_vma=False,
+        )(Qp, corpus)
+    idx, val, nnz = corpus
+    return shard_map(
+        sparse_body, mesh=mesh,
+        in_specs=(
+            P(None, None), P(axis_name, None), P(axis_name, None), P(axis_name),
+        ),
+        out_specs=stacked, check_vma=False,
+    )(Qp, idx, val, nnz)

@@ -1,0 +1,200 @@
+"""RetrievalServer: batched query-time APSS over a build-once index.
+
+Modeled on ``launch.serve.LMServer``'s slot/latch pattern: requests join a
+padded query batch at the next ``step()`` boundary, ONE jit'd
+:func:`~repro.serving.query.query_topk` call serves the whole batch (the
+batch is always padded to ``max_batch`` rows, so the compiled executable is
+reused forever), and per-request results latch into their slots. A tiny
+LRU cache keyed on the query-vector hash short-circuits repeat queries —
+the classic head-of-zipf serving win — without touching the device.
+
+For mesh-sharded indexes the underlying ``query_topk`` runs the per-shard
+scoring path and merges partial top-k host-side; the server is agnostic.
+"""
+
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apss import normalize_rows
+from repro.serving.index import APSSIndex
+from repro.serving.query import query_topk
+
+
+class RetrievalResult(NamedTuple):
+    """One request's top-k neighbors (host numpy; ready to serialize)."""
+
+    values: np.ndarray   # (k,) f32 similarities, -inf padded
+    indices: np.ndarray  # (k,) i32 corpus row ids, -1 padded
+    count: int           # exact #corpus rows ≥ threshold (may exceed k)
+    cached: bool         # served from the LRU cache
+
+
+class ServerStats(NamedTuple):
+    requests: int
+    steps: int
+    cache_hits: int
+
+
+class RetrievalServer:
+    """Batched online retrieval over a prebuilt :class:`APSSIndex`.
+
+    Args:
+      index: built once via :func:`~repro.serving.index.build_index`.
+      threshold / k: fixed per server (one compiled executable).
+      max_batch: padded batch width; requests beyond it wait for the next
+        step boundary.
+      normalize: L2-normalize incoming queries (the paper's ``||x|| = 1``
+        contract; cache keys hash the raw bytes BEFORE normalization so
+        clients need not normalize consistently).
+      cache_size: LRU entries; 0 disables the cache.
+      use_kernel: route tile scoring through the rectangular Pallas
+        kernels (single-host indexes; TPU).
+    """
+
+    def __init__(
+        self,
+        index: APSSIndex,
+        *,
+        threshold: float,
+        k: int = 32,
+        max_batch: int = 8,
+        normalize: bool = True,
+        cache_size: int = 256,
+        use_kernel: bool = False,
+        block_q: Optional[int] = None,
+    ):
+        self.index = index
+        self.threshold = float(threshold)
+        self.k = int(k)
+        self.max_batch = int(max_batch)
+        self.normalize = bool(normalize)
+        self.use_kernel = bool(use_kernel)
+        # Pad every batch to one query block: the jitted scoring path then
+        # sees a single (block_q, m) shape for the server's lifetime.
+        self.block_q = int(block_q or max(8, self.max_batch))
+        self.cache_size = int(cache_size)
+        self._cache: collections.OrderedDict[str, RetrievalResult] = (
+            collections.OrderedDict()
+        )
+        self._pending: collections.deque[tuple[int, np.ndarray, str]] = (
+            collections.deque()
+        )
+        self._results: dict[int, RetrievalResult] = {}
+        self._next_id = 0
+        self._requests = 0
+        self._steps = 0
+        self._cache_hits = 0
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, query) -> int:
+        """Enqueue one query vector ``(m,)``; returns a request id.
+
+        Cache hits latch their result immediately and never join a batch.
+        """
+        q = np.asarray(query, np.float32).reshape(-1)
+        if q.shape[0] != self.index.m:
+            raise ValueError(f"query dim {q.shape[0]} != index m {self.index.m}")
+        rid = self._next_id
+        self._next_id += 1
+        self._requests += 1
+        key = self._cache_key(q)
+        hit = self._cache_get(key)
+        if hit is not None:
+            self._cache_hits += 1
+            self._results[rid] = hit._replace(cached=True)
+        else:
+            self._pending.append((rid, q, key))
+        return rid
+
+    def step(self) -> int:
+        """Serve up to ``max_batch`` pending requests with ONE jit'd call.
+
+        Returns the number of requests served this step (0 = idle).
+        """
+        if not self._pending:
+            return 0
+        batch = [
+            self._pending.popleft()
+            for _ in range(min(self.max_batch, len(self._pending)))
+        ]
+        Q = np.zeros((self.max_batch, self.index.m), np.float32)
+        for slot, (_, q, _) in enumerate(batch):
+            Q[slot] = q
+        Qj = jnp.asarray(Q)
+        if self.normalize:
+            Qj = normalize_rows(Qj)
+        m = query_topk(
+            self.index, Qj, self.threshold, self.k,
+            block_q=self.block_q, use_kernel=self.use_kernel,
+        )
+        values = np.asarray(m.values)
+        indices = np.asarray(m.indices)
+        counts = np.asarray(m.counts)
+        for slot, (rid, _, key) in enumerate(batch):
+            # Per-request copies, frozen: the cache and every client hold
+            # the same arrays, so in-place mutation by one caller would
+            # otherwise corrupt later cache hits — make it raise instead.
+            v = values[slot].copy()
+            i = indices[slot].copy()
+            v.setflags(write=False)
+            i.setflags(write=False)
+            res = RetrievalResult(
+                values=v, indices=i, count=int(counts[slot]), cached=False
+            )
+            self._results[rid] = res
+            self._cache_put(key, res)
+        self._steps += 1
+        return len(batch)
+
+    def result(self, rid: int) -> RetrievalResult:
+        """Pop a finished request's result (steps until it is ready)."""
+        while rid not in self._results:
+            if not self.step():
+                raise KeyError(f"unknown request id {rid}")
+        return self._results.pop(rid)
+
+    def serve(self, queries: Sequence) -> list[RetrievalResult]:
+        """Convenience: submit all, drain in batches, return in order."""
+        rids = [self.submit(q) for q in queries]
+        while self._pending:
+            self.step()
+        return [self.result(r) for r in rids]
+
+    # -- LRU cache ----------------------------------------------------------
+
+    def _cache_key(self, q: np.ndarray) -> str:
+        h = hashlib.blake2b(q.tobytes(), digest_size=16)
+        h.update(np.float32(self.threshold).tobytes())
+        h.update(np.int32(self.k).tobytes())
+        return h.hexdigest()
+
+    def _cache_get(self, key: str) -> Optional[RetrievalResult]:
+        if self.cache_size <= 0:
+            return None
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key: str, res: RetrievalResult) -> None:
+        if self.cache_size <= 0:
+            return
+        self._cache[key] = res
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    @property
+    def stats(self) -> ServerStats:
+        return ServerStats(
+            requests=self._requests,
+            steps=self._steps,
+            cache_hits=self._cache_hits,
+        )
