@@ -1,0 +1,187 @@
+import os
+
+# 8 virtual devices so the distributed candidates are real (NOT the
+# dry-run's 512); must precede the first jax import.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Planner benchmark: predicted vs measured cost per variant.
+
+The planner's performance story must be falsifiable: for each benchmark
+corpus this module (1) calibrates the hardware profile, (2) plans with the
+full candidate set, (3) MEASURES one representative configuration per
+variant family (the best-predicted block size of each), and (4) records
+predicted-vs-measured side by side into ``BENCH_apss.json`` under
+``"planner"`` — including whether the chosen plan landed within 2× of the
+best measured variant (asserted by the CI schema check). A drift in the
+cost model now shows up as a benchmark regression, not folklore.
+
+    PYTHONPATH=src python -m benchmarks.bench_planner --json [PATH] [--smoke]
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+
+def _corpora(*, smoke: bool):
+    """Benchmark corpora: the paper's sparse regime + a dense corpus."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.apss import normalize_rows
+    from repro.data.sparse import sparse_zipfian_corpus
+
+    # The sparse lane sits in the paper's Table-1 regime (density ≈ 0.1%,
+    # m ≫ cap) where the CSR path wins on any hardware; the dense lane is a
+    # fully dense corpus where the sparse representation isn't even a
+    # candidate — between them the planner must flip representation.
+    if smoke:
+        sparse_shape, dense_shape = (1024, 8192, 8.0), (512, 256)
+    else:
+        sparse_shape, dense_shape = (2048, 8192, 16.0), (1024, 512)
+    rng = np.random.default_rng(7)
+    dense = np.abs(rng.standard_normal(dense_shape)).astype(np.float32)
+    return {
+        "sparse_lowdens": sparse_zipfian_corpus(*sparse_shape, seed=0),
+        "dense": np.asarray(normalize_rows(jnp.asarray(dense))),
+    }
+
+
+def measure(
+    *,
+    smoke: bool = False,
+    threshold: float = 0.5,
+    k: int = 32,
+    iters: int = 3,
+    use_mesh: bool | None = None,
+    max_families: int = 8,
+) -> dict:
+    import jax
+
+    from benchmarks.common import time_fn
+    from repro.compat import make_mesh
+    from repro.planner.calibrate import calibrate
+    from repro.planner.plan import execute, plan_apss
+
+    # One-shot hardware calibration (cached to JSON keyed by device kind);
+    # on virtual-device hosts this prices the "parallel" variants honestly.
+    profile = calibrate(save=True)
+    if use_mesh is None:
+        use_mesh = not smoke
+    mesh = (
+        make_mesh((jax.device_count(),), ("data",))
+        if use_mesh and jax.device_count() > 1
+        else None
+    )
+
+    out = {
+        "profile": dataclasses.asdict(profile),
+        "threshold": threshold,
+        "k": k,
+        "mesh_devices": 1 if mesh is None else jax.device_count(),
+        "corpora": {},
+    }
+    for name, corpus in _corpora(smoke=smoke).items():
+        plan = plan_apss(
+            corpus, threshold, k, mesh, profile=profile, include_kernel=False
+        )
+        # One measured config per variant family (its best-predicted block
+        # size): block-size ties are modeled identically, so measuring all
+        # of them would only add noise to the within-2× comparison. The
+        # corpus is converted once per representation (prepared=True) so
+        # timings cover the join the model prices, not per-call to_dense.
+        from repro.planner.plan import _to_representation
+
+        seen: set = set()
+        rep_cache: dict = {}
+        entries = []
+        for e in plan.estimates:
+            fam = (e.config.kind, e.config.schedule,
+                   e.config.accumulation, e.config.sparse)
+            if fam in seen or len(entries) >= max_families:
+                continue
+            seen.add(fam)
+            if e.config.sparse not in rep_cache:
+                rep_cache[e.config.sparse] = _to_representation(
+                    corpus, e.config.sparse
+                )
+            data = rep_cache[e.config.sparse]
+            us = time_fn(
+                lambda cfg=e.config, d=data: execute(
+                    cfg, d, threshold, k, mesh, prepared=True
+                ),
+                warmup=1, iters=iters,
+            )
+            e.measured_s = us * 1e-6
+            entries.append({**e.as_dict(), "measured_us": us})
+        best = min(entries, key=lambda d: d["measured_us"])
+        # The planner's full operating mode is plan + autotune: the best-
+        # predicted config of each of the top-3 distinct variant families
+        # is microbenchmarked and the measured winner runs — exactly what
+        # plan_apss(autotune=True) does. Entries are family-deduped in
+        # predicted order, so the autotuned choice is the best of the
+        # first three — graded against the best of EVERY measured family.
+        chosen = min(entries[:3], key=lambda d: d["measured_us"])
+        ratio = chosen["measured_us"] / best["measured_us"]
+        out["corpora"][name] = {
+            "summary": plan.summary.as_dict(),
+            "chosen_predicted": plan.config.name,
+            "chosen": chosen["config"],
+            "autotuned": True,
+            "entries": entries,
+            "best_measured": best["config"],
+            "chosen_over_best": ratio,
+            "chosen_within_2x": ratio <= 2.0,
+        }
+        print(
+            f"[planner] {name}: chosen {chosen['config']} "
+            f"(predicted-best {plan.config.name}; "
+            f"{chosen['measured_us']:.0f}us measured, "
+            f"{chosen['predicted_s'] * 1e6:.0f}us predicted), "
+            f"best measured {best['config']} ({best['measured_us']:.0f}us), "
+            f"ratio {ratio:.2f}x"
+        )
+        for d in entries:
+            print(
+                f"    {d['config']:<44} predicted {d['predicted_s']*1e6:>9.0f}us"
+                f"  measured {d['measured_us']:>9.0f}us"
+                f"  wire {d['wire_bytes']/1e6:>7.2f}MB"
+            )
+    return out
+
+
+def merge_into(path: str, r: dict) -> None:
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["planner"] = r
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_apss.json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpora, single-device candidates (CI)")
+    ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    r = measure(
+        smoke=args.smoke, threshold=args.threshold, k=args.k,
+        iters=2 if args.smoke else args.iters,
+    )
+    for name, c in r["corpora"].items():
+        ok = "OK" if c["chosen_within_2x"] else "MISS"
+        print(f"{name}: {c['chosen']} within-2x={ok} ({c['chosen_over_best']:.2f}x)")
+    if args.json:
+        merge_into(args.json, r)
+        print(f"-> merged planner record into {args.json}")
+
+
+if __name__ == "__main__":
+    main()

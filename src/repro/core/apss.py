@@ -20,6 +20,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.matches import Matches, extract_matches, merge_matches
 from repro.core.pruning import (
@@ -34,6 +35,20 @@ from repro.core.sparse import (
     pad_rows_sparse,
     sparse_similarity_topk,
 )
+from repro.planner import telemetry
+
+
+def _mask_counts(mask):
+    """Host-side live-tile accounting from a mask — (live, total, per-row
+    counts), or Nones when the mask is traced (cannot be read without
+    forcing device work, which telemetry never does)."""
+    if mask is None:
+        return None, None, None
+    try:
+        mk = np.asarray(mask)
+    except Exception:  # jax tracer: leave unaccounted
+        return None, None, None
+    return int(mk.sum()), int(mk.size), tuple(int(x) for x in mk.sum(axis=1))
 
 
 def normalize_rows(D: jax.Array, eps: float = 1e-12) -> jax.Array:
@@ -80,6 +95,8 @@ def similarity_topk(
     col_offset: jax.Array | int = 0,
     col_valid: Optional[jax.Array] = None,
     use_kernel: bool = False,
+    variant: Optional[str] = None,
+    mesh=None,
 ) -> Matches:
     """Blocked similarity join of queries ``Q (nq, m)`` vs corpus ``C (nc, m)``.
 
@@ -95,7 +112,30 @@ def similarity_topk(
     distributed ring/halfring schedules take. ``col_valid`` masks are not
     supported by the kernel (only contiguous-prefix validity, which the
     kernel derives from the unpadded corpus length).
+
+    ``variant="auto"`` hands the whole self-join to the execution planner
+    (``planner.plan_apss``): ``Q`` must be ``C`` (the same object) with
+    ``exclude_self=True``, and ``mesh`` (optional) opens the distributed
+    variants to the candidate set. Every other argument is chosen by the
+    planner from sampled corpus statistics and the calibrated cost models.
     """
+    if variant not in (None, "auto"):
+        raise ValueError(f"unknown variant: {variant!r} (only 'auto')")
+    if variant == "auto":
+        if Q is not C:
+            raise ValueError(
+                "variant='auto' plans the APSS self-join: pass the same "
+                "object as Q and C (rectangular retrieval is served by "
+                "serving.query_topk against a prebuilt index)"
+            )
+        if not exclude_self:
+            raise ValueError(
+                "variant='auto' dispatches to self-join variants, which "
+                "exclude self-pairs; pass exclude_self=True"
+            )
+        from repro.planner.plan import plan_apss
+
+        return plan_apss(Q, threshold, k, mesh).run()
     if isinstance(Q, SparseCorpus) != isinstance(C, SparseCorpus):
         raise ValueError(
             "Q and C must use the same representation "
@@ -199,10 +239,23 @@ def apss_blocked(
         m = similarity_topk(
             D, D, threshold, k, block_rows=block_rows, exclude_self=True
         )
+    mask = None
+    if with_prune_stats:
+        Dp, _ = pad_rows(D, block_rows)
+        mask = block_prune_mask(Dp, Dp, threshold, block_rows)
+    if telemetry.enabled():
+        n, mdim = D.shape
+        live, total, counts = _mask_counts(mask)
+        flops = telemetry.dense_join_flops(n, n, mdim)
+        if use_kernel and live is not None and total:
+            flops *= live / total  # @pl.when skips dead tiles
+        telemetry.record(telemetry.ApssStats(
+            variant="blocked/dense-kernel" if use_kernel else "blocked/dense-xla",
+            n=n, m=mdim, block_rows=block_rows, sparse=False, flops=flops,
+            live_tiles=live, total_tiles=total, tile_counts=counts,
+        ))
     if not with_prune_stats:
         return m
-    Dp, _ = pad_rows(D, block_rows)
-    mask = block_prune_mask(Dp, Dp, threshold, block_rows)
     return m, prune_stats(mask)
 
 
@@ -236,6 +289,17 @@ def _apss_blocked_sparse(
         m = sparse_similarity_topk(
             D, D, threshold, k, block_rows=block_rows, exclude_self=True
         )
+    if telemetry.enabled():
+        live, total, counts = _mask_counts(mask)
+        flops = telemetry.sparse_join_flops(D.n, D.n, D.cap)
+        if use_kernel and live is not None and total:
+            flops *= live / total  # worklist compaction skips dead tiles
+        telemetry.record(telemetry.ApssStats(
+            variant="blocked/sparse-kernel" if use_kernel else "blocked/sparse-xla",
+            n=D.n, m=D.m, block_rows=bs, sparse=True, flops=flops,
+            live_tiles=live, total_tiles=total, tile_counts=counts,
+            extra={"cap": D.cap},
+        ))
     if not with_prune_stats:
         return m
     return m, prune_stats(mask)

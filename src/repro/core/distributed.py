@@ -65,6 +65,7 @@ from repro.core.sparse import (
     shard_dims,
     sparse_similarity_topk,
 )
+from repro.planner import telemetry
 
 
 class ApssStats(NamedTuple):
@@ -100,6 +101,24 @@ def _from_wire(x: jax.Array, dtype) -> jax.Array:
     if x.dtype == jnp.uint16:
         return lax.bitcast_convert_type(x, dtype)
     return x
+
+
+def default_candidate_capacity(k: int) -> int:
+    """Candidate-capacity default of the compressed/recursive accumulations
+    — the single definition shared by dispatch, telemetry records, and the
+    planner's cost models (``planner.costmodel``)."""
+    return max(4 * k, 32)
+
+
+def _wire_itemsize(dtype) -> int:
+    """Bytes/element a traveling block occupies on the wire (bf16 → 2)."""
+    return 2 if dtype == jnp.bfloat16 else jnp.dtype(dtype).itemsize
+
+
+def _axis_label(axis_name) -> str:
+    if isinstance(axis_name, (tuple, list)):
+        return "+".join(axis_name)
+    return str(axis_name)
 
 
 def _ring_perm(p: int) -> list[tuple[int, int]]:
@@ -182,6 +201,21 @@ def apss_horizontal(
     else:
         raise ValueError(f"unknown horizontal schedule: {schedule}")
 
+    if telemetry.enabled():
+        n, m = D.shape
+        n_loc = n // p
+        telemetry.record(telemetry.ApssStats(
+            variant=f"horizontal/{schedule}",
+            n=n, m=m, devices=p, block_rows=block_rows, sparse=False,
+            hops=telemetry.horizontal_hops(
+                schedule, p, _axis_label(axis_name),
+                telemetry.dense_block_bytes(n_loc, m, _wire_itemsize(D.dtype)),
+                telemetry.matches_bytes(n_loc, k),
+            ),
+            flops=telemetry.dense_join_flops(n_loc, n, m)
+            * (0.55 if schedule == "halfring" and not use_kernel else 1.0),
+            extra={"use_kernel": use_kernel},
+        ))
     # The replication checker has no rule for pallas_call on some JAX
     # versions; the kernel path is verified numerically by tests instead.
     return shard_map(
@@ -404,6 +438,20 @@ def _apss_horizontal_sparse(
             f"sparse horizontal supports allgather|ring|halfring, "
             f"got: {schedule}"
         )
+    if telemetry.enabled():
+        n, n_loc = D.n, D.n // p
+        telemetry.record(telemetry.ApssStats(
+            variant=f"horizontal/{schedule}",
+            n=n, m=D.m, devices=p, block_rows=block_rows, sparse=True,
+            hops=telemetry.horizontal_hops(
+                schedule, p, _axis_label(axis_name),
+                telemetry.csr_block_bytes(n_loc, D.cap),
+                telemetry.matches_bytes(n_loc, k),
+                payload="csr_block",
+            ),
+            flops=telemetry.sparse_join_flops(n_loc, n, D.cap),
+            extra={"cap": D.cap},
+        ))
     # The VMA checker has no rule for the scatter/gather ops inside the
     # sparse tile primitive on some JAX versions; verified numerically.
     return shard_map(
@@ -588,12 +636,25 @@ def apss_vertical(
     def make_partials(D_loc):
         return functools.partial(_partial_scores, D_loc, block_rows=block_rows)
 
-    return _vertical_dispatch(
+    out = _vertical_dispatch(
         D, make_partials, n, threshold, k, mesh, axis_name,
         accumulation=accumulation, block_rows=block_rows,
         candidate_capacity=candidate_capacity, return_stats=return_stats,
         in_specs=P(None, axis_name), strict_vma=True,
     )
+    if telemetry.enabled():
+        p = mesh.shape[axis_name]
+        C = candidate_capacity or default_candidate_capacity(k)
+        telemetry.record(telemetry.ApssStats(
+            variant=f"vertical/{accumulation}",
+            n=n, m=D.shape[1], devices=p, block_rows=block_rows, sparse=False,
+            hops=telemetry.vertical_hops(
+                accumulation, str(axis_name), p, n, block_rows, C
+            ),
+            flops=telemetry.dense_join_flops(n, n, D.shape[1]) / p,
+            extra={"capacity": C},
+        ))
+    return out
 
 
 def _vertical_dispatch(
@@ -609,7 +670,7 @@ def _vertical_dispatch(
     agnostic.
     """
     p = mesh.shape[axis_name]
-    C = candidate_capacity or max(4 * k, 32)
+    C = candidate_capacity or default_candidate_capacity(k)
     if n % block_rows != 0:
         raise ValueError(f"n={n} must be a multiple of block_rows={block_rows}")
     args = args if isinstance(args, tuple) else (args,)
@@ -715,7 +776,7 @@ def _apss_vertical_sparse(
 
         return partials
 
-    return _vertical_dispatch(
+    out = _vertical_dispatch(
         (jnp.asarray(idx_s), jnp.asarray(val_s)), make_partials, n,
         threshold, k, mesh, axis_name,
         accumulation=accumulation, block_rows=block_rows,
@@ -725,6 +786,18 @@ def _apss_vertical_sparse(
         # sparse partial-score primitive; verified numerically by tests.
         strict_vma=False,
     )
+    if telemetry.enabled():
+        C = candidate_capacity or default_candidate_capacity(k)
+        telemetry.record(telemetry.ApssStats(
+            variant=f"vertical/{accumulation}",
+            n=n, m=D.m, devices=p, block_rows=block_rows, sparse=True,
+            hops=telemetry.vertical_hops(
+                accumulation, str(axis_name), p, n, block_rows, C
+            ),
+            flops=telemetry.sparse_join_flops(n, n, cap_loc),
+            extra={"capacity": C, "cap_loc": cap_loc},
+        ))
+    return out
 
 
 def _partial_scores(D_loc, blk, block_rows):
@@ -961,7 +1034,24 @@ def apss_2d(
         )
     q = mesh.shape[row_axis]
     r = mesh.shape[col_axis]
-    C = candidate_capacity or max(4 * k, 32)
+    C = candidate_capacity or default_candidate_capacity(k)
+
+    if telemetry.enabled():
+        n, m = D.shape
+        n_loc = n // q
+        bs = min(block_rows, n_loc)
+        while n_loc % bs:  # mirror _apss_2d_local's block clamp
+            bs -= 1
+        telemetry.record(telemetry.ApssStats(
+            variant=f"2d/{accumulation}",
+            n=n, m=m, devices=q * r, block_rows=bs, sparse=False,
+            hops=telemetry.twod_hops(
+                q, r, str(row_axis), str(col_axis), n_loc, m,
+                _wire_itemsize(D.dtype), bs, C, accumulation,
+            ),
+            flops=telemetry.dense_join_flops(n_loc, n, m) / r,
+            extra={"mesh": {str(row_axis): q, str(col_axis): r}},
+        ))
 
     fn = functools.partial(
         _apss_2d_local,
@@ -1073,6 +1163,42 @@ def _apss_2d_local(
 # ---------------------------------------------------------------------------
 
 
+def _nested_ring_sweep(mesh, axes, carry0, join):
+    """Shared N-level nested-ring driver (dense blocks or CSR triples).
+
+    ``carry0 = (buf, owner, matches)``: ``buf`` is an arbitrary pytree that
+    hops with its 1-element i32 ``owner`` id; ``join(buf, owner, matches)``
+    scores the local rows against the traveling block. The innermost axis
+    rings most often; each outer axis hops once per full inner sweep.
+    """
+    sizes = [mesh.shape[a] for a in axes]
+
+    def compute(carry):
+        buf, own, matches = carry
+        return buf, own, join(buf, own, matches)
+
+    def hop(carry, axis):
+        buf, own, matches = carry
+        perm = _ring_perm(mesh.shape[axis])
+        pp = functools.partial(lax.ppermute, axis_name=axis, perm=perm)
+        return jax.tree.map(pp, buf), pp(own), matches
+
+    def sweep(level, carry):
+        if level == len(axes):
+            return compute(carry)
+        axis, p = axes[level], sizes[level]
+
+        def step(_, c):
+            c = sweep(level + 1, c)
+            return hop(c, axis)
+
+        carry = lax.fori_loop(0, p - 1, step, carry)
+        return sweep(level + 1, carry)  # last sub-sweep: no trailing hop
+
+    _, _, matches = sweep(0, carry0)
+    return matches
+
+
 def apss_horizontal_hierarchical(
     D: jax.Array,
     threshold: float,
@@ -1094,57 +1220,75 @@ def apss_horizontal_hierarchical(
     The traveling block carries its **owner id** (a 1-element i32 that hops
     with it), which replaces all modular-offset bookkeeping: the column
     offset of the current block is simply ``owner · n_loc``.
+
+    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus`: the CSR triple
+    rides the nested ring exactly like the flat sparse ring/halfring — each
+    hop moves ``O(n_loc · cap)`` words instead of ``O(n_loc · m)`` — and
+    every block pair is scored with the gather-dot sparse tile primitive
+    (parity with the sparse ring asserted by ``tests/test_sparse.py``).
     """
-    if isinstance(D, SparseCorpus):
-        raise NotImplementedError(
-            "sparse hierarchical schedule is an open item (see ROADMAP.md)"
-        )
     axes = tuple(axes)
     sizes = [mesh.shape[a] for a in axes]
+    ptot = 1
+    for s in sizes:
+        ptot *= s
+    if isinstance(D, SparseCorpus) and use_kernel:
+        # validate BEFORE the telemetry record: a raising call must not
+        # log wire bytes for an execution that never happens
+        raise ValueError(
+            "sparse use_kernel is the self-join worklist path "
+            "(kernels.apss_block.sparse); distributed sparse schedules "
+            "score with the XLA gather-dot primitive"
+        )
+
+    if telemetry.enabled():
+        n = D.shape[0]
+        n_loc = n // ptot
+        sparse_in = isinstance(D, SparseCorpus)
+        block_bytes = (
+            telemetry.csr_block_bytes(n_loc, D.cap) if sparse_in
+            else telemetry.dense_block_bytes(
+                n_loc, D.shape[1], _wire_itemsize(D.dtype)
+            )
+        )
+        telemetry.record(telemetry.ApssStats(
+            variant="hierarchical",
+            n=n, m=D.shape[1], devices=ptot, block_rows=block_rows,
+            sparse=sparse_in,
+            hops=telemetry.hierarchical_hops(
+                tuple(sizes), axes, block_bytes,
+                payload="csr_block" if sparse_in else "dense_block",
+            ),
+            flops=(
+                telemetry.sparse_join_flops(n_loc, n, D.cap) if sparse_in
+                else telemetry.dense_join_flops(n_loc, n, D.shape[1])
+            ),
+            extra={"axes": dict(zip(axes, sizes)), "use_kernel": use_kernel},
+        ))
+
+    if isinstance(D, SparseCorpus):
+        return _sparse_horizontal_hierarchical(
+            D, threshold, k, mesh, axes, block_rows=block_rows
+        )
 
     def body(D_loc):
         n_loc = D_loc.shape[0]
         bs = min(block_rows, n_loc)
-        # Flat row-major rank over `axes`.
-        flat = jnp.int32(0)
-        for a in axes:
-            flat = flat * mesh.shape[a] + lax.axis_index(a)
+        flat = _flat_axis_index(axes)  # row-major rank over `axes`
         row_off = flat * n_loc
-        owner = flat[None]  # travels with the buffer
 
-        def compute(carry):
-            buf, own, matches = carry
+        def join(buf, own, matches):
             m_new = similarity_topk(
                 D_loc, _from_wire(buf, D_loc.dtype), threshold, k,
                 block_rows=bs, exclude_self=True, row_offset=row_off,
                 col_offset=own[0] * n_loc, use_kernel=use_kernel,
             )
-            return buf, own, merge_matches(matches, m_new)
-
-        def hop(carry, axis):
-            buf, own, matches = carry
-            perm = _ring_perm(mesh.shape[axis])
-            return (
-                lax.ppermute(buf, axis, perm=perm),
-                lax.ppermute(own, axis, perm=perm),
-                matches,
-            )
-
-        def sweep(level, carry):
-            if level == len(axes):
-                return compute(carry)
-            axis, p = axes[level], sizes[level]
-
-            def step(_, c):
-                c = sweep(level + 1, c)
-                return hop(c, axis)
-
-            carry = lax.fori_loop(0, p - 1, step, carry)
-            return sweep(level + 1, carry)  # last sub-sweep: no trailing hop
+            return merge_matches(matches, m_new)
 
         matches0 = _pvary(_empty_local_matches(n_loc, k), axes)
-        _, _, matches = sweep(0, (_to_wire(D_loc), owner, matches0))
-        return matches
+        return _nested_ring_sweep(
+            mesh, axes, (_to_wire(D_loc), flat[None], matches0), join
+        )
 
     return shard_map(
         body,
@@ -1153,6 +1297,52 @@ def apss_horizontal_hierarchical(
         out_specs=_matches_specs(axes),
         check_vma=not use_kernel,
     )(D)
+
+
+def _sparse_horizontal_hierarchical(
+    D: SparseCorpus, threshold, k, mesh, axes, *, block_rows,
+):
+    """Nested pod ring on CSR: the sparse twin of the dense hierarchical.
+
+    The traveling block is the CSR triple (plus its owner id), hopping the
+    same nested-ring pattern via the shared :func:`_nested_ring_sweep`
+    driver — the wire-volume win of the sparse ring (``O(n_loc · cap)``
+    words/hop) composed with the hierarchical schedule's hop economy on
+    slow links. Every block pair is scored with the fully-traceable blocked
+    gather-dot join; exactness and parity with the flat sparse ring are
+    asserted by ``tests/test_sparse.py``.
+    """
+    m = D.m
+
+    def body(idx, val, nnz):
+        n_loc = idx.shape[0]
+        bs = min(block_rows, n_loc)
+        loc = SparseCorpus(idx, val, nnz, m)
+        flat = _flat_axis_index(axes)  # row-major rank over `axes`
+        row_off = flat * n_loc
+
+        def join(buf, own, matches):
+            m_new = sparse_similarity_topk(
+                loc, SparseCorpus(*buf, m), threshold, k,
+                block_rows=bs, exclude_self=True, row_offset=row_off,
+                col_offset=own[0] * n_loc, vary_axes=axes,
+            )
+            return merge_matches(matches, m_new)
+
+        matches0 = _pvary(_empty_local_matches(n_loc, k), axes)
+        return _nested_ring_sweep(
+            mesh, axes, ((idx, val, nnz), flat[None], matches0), join
+        )
+
+    # Same VMA caveat as every sparse schedule: the scatter/gather ops in
+    # the sparse tile primitive have no checker rule; verified numerically.
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None), P(axes)),
+        out_specs=_matches_specs(axes),
+        check_vma=False,
+    )(D.indices, D.values, D.nnz)
 
 
 # ---------------------------------------------------------------------------
@@ -1170,7 +1360,19 @@ def apss(
     **kwargs,
 ) -> Matches | tuple[Matches, ApssStats]:
     """Top-level entry: pick a data distribution (the paper's core finding is
-    that the best one is dataset-dependent, so all are first-class)."""
+    that the best one is dataset-dependent, so all are first-class).
+
+    ``distribution="auto"`` hands the choice to the execution planner
+    (``planner.plan_apss``): corpus statistics are sampled, every valid
+    ``(variant, block_rows, use_kernel)`` configuration is priced by the
+    calibrated cost models, and the cheapest one runs. Extra ``kwargs``
+    (``profile=``, ``autotune=``, ``block_rows_choices=`` …) are forwarded
+    to the planner.
+    """
+    if distribution == "auto":
+        from repro.planner.plan import plan_apss
+
+        return plan_apss(D, threshold, k, mesh, **kwargs).run()
     if distribution == "horizontal":
         return apss_horizontal(D, threshold, k, mesh, **kwargs)
     if distribution == "vertical":

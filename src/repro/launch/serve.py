@@ -1,6 +1,6 @@
 """Serving entry point: batched request loops with per-request latching.
 
-Two modes:
+Three modes:
 
 - ``--mode lm`` (default): continuous-batch LM decode over the transformer
   stack (:class:`LMServer`).
@@ -9,11 +9,18 @@ Two modes:
   corpus, then stream query batches through a
   :class:`~repro.serving.server.RetrievalServer` (one jit'd ``query_topk``
   per step boundary, LRU cache, per-query latency/QPS report).
+- ``--mode auto``: the execution planner end-to-end — calibrate the
+  hardware profile (one-shot, cached), plan the APSS self-join over the
+  synthetic corpus (``planner.plan_apss``: every variant priced by the
+  cost models), print the chosen Plan + the ranked predictions, then run
+  it and report predicted vs measured.
 
 CPU-scale demos (reduced configs):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --requests 4
     PYTHONPATH=src python -m repro.launch.serve --mode retrieval \\
         --corpus-n 4096 --corpus-m 2048 --requests 64 --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --mode auto \\
+        --corpus-n 2048 --corpus-m 8192 --threshold 0.5
 """
 
 from __future__ import annotations
@@ -126,9 +133,62 @@ def run_retrieval(args) -> None:
     )
 
 
+def run_auto(args) -> None:
+    """Auto mode: calibrate → plan (print it) → run the chosen variant."""
+    import numpy as np
+
+    from repro.compat import make_mesh
+    from repro.data.sparse import sparse_clustered_corpus
+    from repro.planner.calibrate import calibrate, profile_path
+    from repro.planner.plan import plan_apss
+
+    t0 = time.time()
+    sp = sparse_clustered_corpus(
+        args.corpus_n, args.corpus_m, args.avg_nnz, n_clusters=16, seed=0
+    )
+    print(f"[auto] corpus n={sp.n} m={sp.m} cap={sp.cap} "
+          f"(gen {time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    profile = calibrate(save=True)
+    print(
+        f"[auto] calibrated {profile.device_kind} in {time.time() - t0:.1f}s "
+        f"(matmul {profile.matmul_gflops:.1f} GF/s, gather "
+        f"{profile.gather_gflops:.2f} GF/s, wire "
+        f"{profile.collective_gbps:.2f} GB/s) -> {profile_path()}"
+    )
+
+    mesh = (
+        make_mesh((jax.device_count(),), ("data",))
+        if jax.device_count() > 1
+        else None
+    )
+    t0 = time.time()
+    plan = plan_apss(
+        sp, args.threshold, args.k, mesh, profile=profile,
+        autotune=args.autotune,
+    )
+    print(f"[auto] planned in {time.time() - t0:.2f}s")
+    print(plan.describe())
+
+    t0 = time.time()
+    res = jax.block_until_ready(plan.run())
+    cold = time.time() - t0
+    t0 = time.time()
+    res = jax.block_until_ready(plan.run())
+    warm = time.time() - t0
+    n_match = int(np.asarray(res.counts).sum())
+    print(
+        f"[auto] ran {plan.config.name}: {warm * 1e3:.1f}ms warm "
+        f"({cold * 1e3:.0f}ms cold), {n_match} matches; predicted "
+        f"{plan.cost.total_s * 1e3:.1f}ms "
+        f"({plan.cost.total_s / max(warm, 1e-9):.2f}x of measured)"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "retrieval"], default="lm")
+    ap.add_argument("--mode", choices=["lm", "retrieval", "auto"], default="lm")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--gen-tokens", type=int, default=8)
@@ -139,10 +199,15 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--threshold", type=float, default=0.5)
     ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--autotune", action="store_true",
+                    help="auto mode: microbenchmark the top-3 plans")
     args = ap.parse_args()
 
     if args.mode == "retrieval":
         run_retrieval(args)
+        return
+    if args.mode == "auto":
+        run_auto(args)
         return
 
     from repro.configs import get_arch

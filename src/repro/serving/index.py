@@ -144,6 +144,7 @@ def build_index(
     mesh: Optional[Mesh] = None,
     axis_name: str = "data",
     lane_pad: int = 128,
+    plan=None,
 ) -> APSSIndex:
     """Build every corpus-side structure ONCE (host + one XLA pass).
 
@@ -163,7 +164,25 @@ def build_index(
     This is the ONLY place serving-side support structures are computed;
     ``query_topk`` consumes the returned pytree and never rebuilds
     (asserted by ``tests/test_serving.py`` via trace counters).
+
+    ``plan=`` takes a planner decision (a ``planner.Plan`` or bare
+    ``VariantConfig``): its ``block_rows`` becomes the index block size and
+    the corpus is converted to the planned representation (dense ↔ padded
+    CSR) before building — so ``build_index(corpus,
+    plan=plan_apss(corpus, t, k))`` materializes the layout the cost model
+    actually priced.
     """
+    if plan is not None:
+        cfg = getattr(plan, "config", plan)
+        block_rows = cfg.block_rows
+        if cfg.sparse and not isinstance(corpus, SparseCorpus):
+            from repro.core.sparse import from_dense
+
+            corpus = from_dense(np.asarray(corpus))
+        elif not cfg.sparse and isinstance(corpus, SparseCorpus):
+            from repro.core.sparse import to_dense
+
+            corpus = to_dense(corpus)
     normalized = True if normalize else assume_normalized
     if isinstance(corpus, SparseCorpus):
         return _build_sparse(

@@ -61,6 +61,7 @@ from repro.kernels.apss_block.ops import (
     pad_worklist,
 )
 from repro.kernels.apss_block.sparse import rect_sparse_tile_candidates_pallas
+from repro.planner import telemetry
 from repro.serving.index import APSSIndex
 
 # Trace-time counters (Python side effects run only when jit re-traces).
@@ -121,6 +122,23 @@ def query_topk(
                 "(per-shard column validity); use_kernel applies to "
                 "single-host indexes"
             )
+        if telemetry.enabled():
+            p = index.mesh.shape[index.axis_name]
+            depth = (
+                index.corpus[0].shape[1] if index.is_sparse
+                else index.corpus.shape[1]
+            )
+            flops = (
+                telemetry.sparse_join_flops(B, index.n_padded // p, depth)
+                if index.is_sparse
+                else telemetry.dense_join_flops(B, index.n_padded // p, depth)
+            )
+            telemetry.record(telemetry.ApssStats(
+                variant="serving/query-sharded",
+                n=index.n, m=index.m, devices=p,
+                block_rows=index.block_rows, sparse=index.is_sparse,
+                flops=flops, extra={"batch": B},
+            ))
         # No block_q row padding here: the per-shard scorer tiles by the
         # index's block_rows, so padding would only add dead scored rows.
         out = _sharded_query(
@@ -140,6 +158,22 @@ def query_topk(
         use_minsize=use_minsize, normalized=index.normalized,
     )
     wl = compact_rect_worklist(np.asarray(mask), np.asarray(ub))
+    if telemetry.enabled():
+        mk = np.asarray(mask)
+        live = 0 if wl is None else int(wl.shape[1])
+        depth = (
+            int(index.bdims.shape[1]) if index.is_sparse
+            else int(index.corpus.shape[1])
+        )
+        telemetry.record(telemetry.ApssStats(
+            variant="serving/query",
+            n=index.n, m=index.m, block_rows=index.block_rows,
+            sparse=index.is_sparse,
+            flops=2.0 * live * block_q * index.block_rows * depth,
+            live_tiles=live, total_tiles=int(mk.size),
+            tile_counts=tuple(int(x) for x in mk.sum(axis=1)),
+            extra={"batch": B, "use_kernel": use_kernel},
+        ))
     if wl is None:
         return empty_matches(B, k)
     ij, tvalid = pad_worklist(wl)

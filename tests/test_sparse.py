@@ -279,6 +279,55 @@ def test_sparse_2d_raises_not_implemented(mesh4x2, sparse128):
         apss_2d(sparse128[0], T, K, mesh4x2)
 
 
+def test_sparse_hierarchical_exact(sparse128):
+    """ROADMAP item closed: the CSR triple rides the nested pod ring."""
+    from repro.compat import make_mesh
+    from repro.core.distributed import apss_horizontal_hierarchical
+
+    sp, ref = sparse128
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    got = apss_horizontal_hierarchical(
+        sp, T, K, mesh, ("pod", "data"), block_rows=16
+    )
+    _check(got, ref)
+
+
+def test_sparse_hierarchical_3level_exact(sparse128):
+    from repro.compat import make_mesh
+    from repro.core.distributed import apss_horizontal_hierarchical
+
+    sp, ref = sparse128
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    got = apss_horizontal_hierarchical(
+        sp, T, K, mesh, ("pod", "data", "model"), block_rows=16
+    )
+    _check(got, ref)
+
+
+def test_sparse_hierarchical_ring_parity(mesh8, sparse128):
+    """The nested pod ring visits the same (local, visiting) block pairs as
+    the flat sparse ring, just in hierarchical hop order: match-for-match
+    parity, row-aligned (both shard rows in flat row-major rank order)."""
+    from repro.compat import make_mesh
+    from repro.core.distributed import apss_horizontal, apss_horizontal_hierarchical
+
+    sp, _ = sparse128
+    ring = apss_horizontal(sp, T, K, mesh8, "data", schedule="ring", block_rows=16)
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    hier = apss_horizontal_hierarchical(
+        sp, T, K, mesh, ("pod", "data"), block_rows=16
+    )
+    assert match_set(hier) == match_set(ring)
+    np.testing.assert_array_equal(
+        np.asarray(hier.counts), np.asarray(ring.counts)
+    )
+    np.testing.assert_allclose(
+        np.sort(np.asarray(hier.values), axis=-1),
+        np.sort(np.asarray(ring.values), axis=-1),
+        atol=1e-6,
+    )
+
+
 # -- adversarial CSR structure (shared with tests/test_sparse_properties.py) --
 
 

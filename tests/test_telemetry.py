@@ -1,0 +1,182 @@
+"""Telemetry-backed wire-volume tests (ISSUE 4 satellite).
+
+The ROADMAP noted the schedules' wire-volume claims were "verified by
+construction, not measured". These tests execute the instrumented variants
+under a :class:`~repro.planner.telemetry.CommLog` and assert the recorded
+per-hop byte counts — halfring moves ~half the ring's block bytes, the
+sparse ring's per-hop bytes scale with ``cap/m`` — turning the claims into
+executed assertions (the same formulas parameterize the planner's cost
+models, so these tests pin the model too).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apss import apss_blocked, normalize_rows
+from repro.core.distributed import (
+    apss_horizontal,
+    apss_horizontal_hierarchical,
+)
+from repro.core.sparse import from_dense
+from repro.planner import CommLog
+from repro.planner.telemetry import (
+    csr_block_bytes,
+    dense_block_bytes,
+    enabled,
+)
+
+T, K = 0.35, 16
+P8 = 8
+
+
+def _dense(n=128, m=1024, dens=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    D = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    D *= rng.random((n, m)) < dens
+    return np.asarray(normalize_rows(jnp.asarray(D)))
+
+
+def test_commlog_scoping():
+    assert not enabled()
+    with CommLog() as log:
+        assert enabled()
+        assert log.records == []
+    assert not enabled()
+
+
+def test_halfring_halves_ring_bytes(mesh8):
+    """S = Sᵀ: the halfring's traveling blocks make p//2 hops vs the ring's
+    p-1 — block bytes EXACTLY in that ratio; the caravan overhead keeps the
+    total under 0.65× for m ≫ k."""
+    D = jnp.asarray(_dense())
+    with CommLog() as log:
+        apss_horizontal(D, T, K, mesh8, schedule="ring", block_rows=16)
+        apss_horizontal(D, T, K, mesh8, schedule="halfring", block_rows=16)
+    ring, half = log.records
+    rb = ring.bytes_by_payload()["dense_block"]
+    hb = half.bytes_by_payload()["dense_block"]
+    assert hb * (P8 - 1) == rb * (P8 // 2)
+    ratio = half.wire_bytes / ring.wire_bytes
+    assert 0.5 <= ratio < 0.65, ratio
+
+
+def test_sparse_ring_bytes_scale_with_cap(mesh8):
+    """The sparse ring's per-hop payload is the CSR triple: bytes/hop drop
+    from O(n_loc·m) to O(n_loc·cap) — a factor ≈ (2·cap)/m vs dense."""
+    m = 1024
+    D = _dense(128, m, 0.05, seed=1)
+    sp = from_dense(D)
+    n_loc = 128 // P8
+    with CommLog() as log:
+        apss_horizontal(jnp.asarray(D), T, K, mesh8, schedule="ring", block_rows=16)
+        apss_horizontal(sp, T, K, mesh8, "data", schedule="ring", block_rows=16)
+    dense_r, sparse_r = log.records
+    assert dense_r.hops[0].bytes_per_hop == dense_block_bytes(n_loc, m)
+    assert sparse_r.hops[0].bytes_per_hop == csr_block_bytes(n_loc, sp.cap)
+    ratio = sparse_r.wire_bytes / dense_r.wire_bytes
+    assert ratio == pytest.approx(
+        csr_block_bytes(n_loc, sp.cap) / dense_block_bytes(n_loc, m)
+    )
+    assert ratio < 0.25  # 5% density: cap ≪ m
+
+    # Widening cap (inert padding slots) scales the slot payload linearly.
+    sp2 = from_dense(D, cap=2 * sp.cap)
+    with CommLog() as log2:
+        apss_horizontal(sp2, T, K, mesh8, "data", schedule="ring", block_rows=16)
+    b1 = sparse_r.hops[0].bytes_per_hop - n_loc * 4  # minus the nnz vector
+    b2 = log2.last.hops[0].bytes_per_hop - n_loc * 4
+    assert b2 == 2 * b1
+
+
+def test_sparse_halfring_halves_csr_hops(mesh8):
+    """The wire-halving is schedule-level: the CSR triple rides it too."""
+    sp = from_dense(_dense(128, 1024, 0.05, seed=2))
+    with CommLog() as log:
+        apss_horizontal(sp, T, K, mesh8, "data", schedule="ring", block_rows=16)
+        apss_horizontal(sp, T, K, mesh8, "data", schedule="halfring", block_rows=16)
+    ring, half = log.records
+    assert (
+        half.bytes_by_payload()["csr_block"] * (P8 - 1)
+        == ring.bytes_by_payload()["csr_block"] * (P8 // 2)
+    )
+
+
+def test_hierarchical_hop_economy():
+    """Nested ring: same p-1 total block hops as a flat ring, but the slow
+    (outer/pod) axis carries only s_outer - 1 of them."""
+    from repro.compat import make_mesh
+
+    D = jnp.asarray(_dense(128, 256, 0.3, seed=3))
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    with CommLog() as log:
+        apss_horizontal_hierarchical(
+            D, T, K, mesh, ("pod", "data"), block_rows=16
+        )
+    rec = log.last
+    by_axis = {h.axis: h.hops for h in rec.hops}
+    assert by_axis == {"pod": 1, "data": 6}  # (2-1)·1 and (4-1)·2
+    assert sum(by_axis.values()) == P8 - 1   # flat-ring total, redistributed
+
+
+def test_raising_call_records_nothing():
+    """Validation runs BEFORE the telemetry record: a rejected call must
+    not log wire bytes for an execution that never happened."""
+    from repro.compat import make_mesh
+
+    sp = from_dense(_dense(128, 96, 0.2, seed=9))
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    with CommLog() as log:
+        with pytest.raises(ValueError):
+            apss_horizontal_hierarchical(
+                sp, T, K, mesh, ("pod", "data"), use_kernel=True
+            )
+    assert log.records == []
+
+
+def test_blocked_live_fraction_recorded():
+    """The sparse worklist path reports its live-tile fraction + histogram
+    (no extra device work: the worklist is already host-materialized)."""
+    sp = from_dense(_dense(1024, 512, 0.02, seed=4))
+    with CommLog() as log:
+        apss_blocked(sp, 0.5, K, block_rows=128, use_kernel=True)
+    rec = log.last
+    assert rec.variant == "blocked/sparse-kernel"
+    assert rec.live_tiles is not None and rec.total_tiles == 8 * 8
+    assert 0.0 <= rec.live_fraction <= 1.0
+    assert len(rec.tile_counts) == 8
+    assert rec.imbalance >= 1.0
+
+
+def test_serving_query_records_live_fraction():
+    from repro.serving import build_index, query_topk
+
+    sp = from_dense(_dense(256, 512, 0.05, seed=5))
+    index = build_index(sp, block_rows=64, normalize=False)
+    Q = _dense(8, 512, 0.05, seed=6)
+    with CommLog() as log:
+        query_topk(index, jnp.asarray(Q), 0.4, K)
+    rec = log.last
+    assert rec.variant == "serving/query"
+    assert rec.total_tiles == 1 * (256 // 64)  # one query block × 4 corpus blocks
+    assert rec.live_tiles is not None and 0 <= rec.live_tiles <= rec.total_tiles
+    assert rec.extra["batch"] == 8
+
+
+def test_vertical_compressed_vs_allreduce_volume(mesh8_model):
+    """Lemma-1 compaction: the compressed accumulation's collective volume
+    is O(p·C) per row vs the allreduce's O(n) — the paper's 10-100× score
+    volume reduction, visible in the recorded bytes."""
+    D = jnp.asarray(_dense(128, 96, 0.3, seed=7))
+    from repro.core.distributed import apss_vertical
+
+    with CommLog() as log:
+        apss_vertical(
+            D, T, K, mesh8_model, accumulation="allreduce", block_rows=32
+        )
+        apss_vertical(
+            D, T, K, mesh8_model, accumulation="compressed", block_rows=32,
+            candidate_capacity=8,
+        )
+    allred, comp = log.records
+    assert comp.wire_bytes < allred.wire_bytes
