@@ -82,3 +82,35 @@ def run(lines: list) -> None:
             f"flops_dev={fl:.2e};work_scaling={fl0/max(fl,1):.1f}x;"
             f"coll_bytes={cb:.0f}",
         ))
+
+    # Sparse distribution lanes (the paper's Table-1 regime on the same
+    # shapes): the 1-D CSR ring and the composed 2-D checkerboard. The 2-D
+    # sparse entry is host-staged (shard_dims pre-split), so no jit/HLO
+    # pass — modeled per-device FLOPs and collective bytes come from the
+    # telemetry record (the same executed hop formulas the planner prices).
+    from repro.data.sparse import sparse_zipfian_corpus
+    from repro.planner import CommLog
+
+    sp = sparse_zipfian_corpus(1024, 768, 12.0, seed=1)
+    sparse_cases = {
+        "horizontal-ring-sparse": functools.partial(
+            apss_horizontal, threshold=T, k=K, mesh=mesh_h,
+            axis_name="data", schedule="ring", block_rows=128),
+        "2d-sparse-allreduce": functools.partial(
+            apss_2d, threshold=T, k=K, mesh=mesh_2d,
+            accumulation="allreduce", block_rows=128),
+        "2d-sparse-compressed": functools.partial(
+            apss_2d, threshold=T, k=K, mesh=mesh_2d,
+            accumulation="compressed", block_rows=128,
+            candidate_capacity=256),
+    }
+    for name, fn in sparse_cases.items():
+        with CommLog() as log:
+            us = time_fn(fn, sp, warmup=1, iters=3)
+        rec = log.records[0]
+        lines.append(row(
+            f"parallel/{name}", us,
+            f"flops_dev={rec.flops:.2e};"
+            f"work_scaling={fl0/max(rec.flops,1):.1f}x;"
+            f"coll_bytes={rec.wire_bytes}",
+        ))

@@ -47,6 +47,62 @@ def _corpora(*, smoke: bool):
     }
 
 
+def _measure_families(plan, corpus, threshold, k, mesh, iters, max_families):
+    """Measure one config per variant family (its best-predicted block size)
+    and grade the emulated plan+autotune choice (best of the top-3 measured
+    families) against the best of EVERY measured family.
+
+    Block-size ties within a family are modeled identically, so measuring
+    all of them would only add noise to the within-2× comparison. The
+    corpus is converted once per representation (``prepared=True``) so
+    timings cover the join the model prices, not per-call ``to_dense``.
+    """
+    from benchmarks.common import time_fn
+    from repro.planner.plan import _to_representation, execute
+
+    seen: set = set()
+    rep_cache: dict = {}
+    entries = []
+    for e in plan.estimates:
+        fam = (e.config.kind, e.config.schedule,
+               e.config.accumulation, e.config.sparse)
+        if fam in seen or len(entries) >= max_families:
+            continue
+        seen.add(fam)
+        if e.config.sparse not in rep_cache:
+            rep_cache[e.config.sparse] = _to_representation(
+                corpus, e.config.sparse
+            )
+        data = rep_cache[e.config.sparse]
+        us = time_fn(
+            lambda cfg=e.config, d=data: execute(
+                cfg, d, threshold, k, mesh, prepared=True
+            ),
+            warmup=1, iters=iters,
+        )
+        e.measured_s = us * 1e-6
+        entries.append({**e.as_dict(), "measured_us": us})
+    best = min(entries, key=lambda d: d["measured_us"])
+    # The planner's full operating mode is plan + autotune: the best-
+    # predicted config of each of the top-3 distinct variant families is
+    # microbenchmarked and the measured winner runs — exactly what
+    # plan_apss(autotune=True) does. Entries are family-deduped in
+    # predicted order, so the autotuned choice is the best of the first
+    # three — graded against the best of EVERY measured family.
+    chosen = min(entries[:3], key=lambda d: d["measured_us"])
+    ratio = chosen["measured_us"] / best["measured_us"]
+    return {
+        "summary": plan.summary.as_dict(),
+        "chosen_predicted": plan.config.name,
+        "chosen": chosen["config"],
+        "autotuned": True,
+        "entries": entries,
+        "best_measured": best["config"],
+        "chosen_over_best": ratio,
+        "chosen_within_2x": ratio <= 2.0,
+    }
+
+
 def measure(
     *,
     smoke: bool = False,
@@ -58,10 +114,9 @@ def measure(
 ) -> dict:
     import jax
 
-    from benchmarks.common import time_fn
     from repro.compat import make_mesh
     from repro.planner.calibrate import calibrate
-    from repro.planner.plan import execute, plan_apss
+    from repro.planner.plan import plan_apss
 
     # One-shot hardware calibration (cached to JSON keyed by device kind);
     # on virtual-device hosts this prices the "parallel" variants honestly.
@@ -81,73 +136,51 @@ def measure(
         "mesh_devices": 1 if mesh is None else jax.device_count(),
         "corpora": {},
     }
-    for name, corpus in _corpora(smoke=smoke).items():
+    corpora = _corpora(smoke=smoke)
+    for name, corpus in corpora.items():
         plan = plan_apss(
             corpus, threshold, k, mesh, profile=profile, include_kernel=False
         )
-        # One measured config per variant family (its best-predicted block
-        # size): block-size ties are modeled identically, so measuring all
-        # of them would only add noise to the within-2× comparison. The
-        # corpus is converted once per representation (prepared=True) so
-        # timings cover the join the model prices, not per-call to_dense.
-        from repro.planner.plan import _to_representation
-
-        seen: set = set()
-        rep_cache: dict = {}
-        entries = []
-        for e in plan.estimates:
-            fam = (e.config.kind, e.config.schedule,
-                   e.config.accumulation, e.config.sparse)
-            if fam in seen or len(entries) >= max_families:
-                continue
-            seen.add(fam)
-            if e.config.sparse not in rep_cache:
-                rep_cache[e.config.sparse] = _to_representation(
-                    corpus, e.config.sparse
-                )
-            data = rep_cache[e.config.sparse]
-            us = time_fn(
-                lambda cfg=e.config, d=data: execute(
-                    cfg, d, threshold, k, mesh, prepared=True
-                ),
-                warmup=1, iters=iters,
-            )
-            e.measured_s = us * 1e-6
-            entries.append({**e.as_dict(), "measured_us": us})
-        best = min(entries, key=lambda d: d["measured_us"])
-        # The planner's full operating mode is plan + autotune: the best-
-        # predicted config of each of the top-3 distinct variant families
-        # is microbenchmarked and the measured winner runs — exactly what
-        # plan_apss(autotune=True) does. Entries are family-deduped in
-        # predicted order, so the autotuned choice is the best of the
-        # first three — graded against the best of EVERY measured family.
-        chosen = min(entries[:3], key=lambda d: d["measured_us"])
-        ratio = chosen["measured_us"] / best["measured_us"]
-        out["corpora"][name] = {
-            "summary": plan.summary.as_dict(),
-            "chosen_predicted": plan.config.name,
-            "chosen": chosen["config"],
-            "autotuned": True,
-            "entries": entries,
-            "best_measured": best["config"],
-            "chosen_over_best": ratio,
-            "chosen_within_2x": ratio <= 2.0,
-        }
-        print(
-            f"[planner] {name}: chosen {chosen['config']} "
-            f"(predicted-best {plan.config.name}; "
-            f"{chosen['measured_us']:.0f}us measured, "
-            f"{chosen['predicted_s'] * 1e6:.0f}us predicted), "
-            f"best measured {best['config']} ({best['measured_us']:.0f}us), "
-            f"ratio {ratio:.2f}x"
+        rec = _measure_families(
+            plan, corpus, threshold, k, mesh, iters, max_families
         )
-        for d in entries:
-            print(
-                f"    {d['config']:<44} predicted {d['predicted_s']*1e6:>9.0f}us"
-                f"  measured {d['measured_us']:>9.0f}us"
-                f"  wire {d['wire_bytes']/1e6:>7.2f}MB"
-            )
+        out["corpora"][name] = rec
+        _print_corpus(name, rec)
+
+    # 2-D lane: the composed checkerboard families (dense AND sparse — the
+    # full representation × distribution matrix) planned and measured on a
+    # 2-axis mesh. Always runs when 8 devices exist (the CI matrix forces 8
+    # virtual devices job-wide), including --smoke.
+    if jax.device_count() >= 8:
+        mesh2 = make_mesh((4, 2), ("data", "model"))
+        sp = corpora["sparse_lowdens"]
+        plan2 = plan_apss(
+            sp, threshold, k, mesh2, profile=profile, include_kernel=False
+        )
+        rec = _measure_families(
+            plan2, sp, threshold, k, mesh2, iters, max_families
+        )
+        out["mesh2d"] = {
+            "mesh": {str(a): int(v) for a, v in mesh2.shape.items()},
+            "corpora": {"sparse_lowdens": rec},
+        }
+        _print_corpus("sparse_lowdens @ (4,2)", rec)
     return out
+
+
+def _print_corpus(name: str, rec: dict) -> None:
+    print(
+        f"[planner] {name}: chosen {rec['chosen']} "
+        f"(predicted-best {rec['chosen_predicted']}), "
+        f"best measured {rec['best_measured']}, "
+        f"ratio {rec['chosen_over_best']:.2f}x"
+    )
+    for d in rec["entries"]:
+        print(
+            f"    {d['config']:<44} predicted {d['predicted_s']*1e6:>9.0f}us"
+            f"  measured {d['measured_us']:>9.0f}us"
+            f"  wire {d['wire_bytes']/1e6:>7.2f}MB"
+        )
 
 
 def merge_into(path: str, r: dict) -> None:
@@ -178,6 +211,12 @@ def main() -> None:
     for name, c in r["corpora"].items():
         ok = "OK" if c["chosen_within_2x"] else "MISS"
         print(f"{name}: {c['chosen']} within-2x={ok} ({c['chosen_over_best']:.2f}x)")
+    for name, c in r.get("mesh2d", {}).get("corpora", {}).items():
+        ok = "OK" if c["chosen_within_2x"] else "MISS"
+        print(
+            f"mesh2d/{name}: {c['chosen']} within-2x={ok} "
+            f"({c['chosen_over_best']:.2f}x)"
+        )
     if args.json:
         merge_into(args.json, r)
         print(f"-> merged planner record into {args.json}")

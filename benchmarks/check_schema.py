@@ -1,0 +1,164 @@
+"""BENCH_apss.json schema checker — the CI gate as importable code.
+
+Previously an inline heredoc in ``.github/workflows/ci.yml``; now a real
+module so the gate is unit-testable (``tests/test_ci_infra.py``), versioned
+next to the benchmarks that produce the artifact, and extended alongside
+every new benchmark family (latest: the 2-D-sparse planner lane).
+
+    PYTHONPATH=src python -m benchmarks.check_schema /tmp/bench_smoke.json
+
+Every violation raises :class:`SchemaError` with a path-qualified message;
+the acceptance bars baked in here (``chosen_within_2x`` on the single-
+device planner lanes, a measured 2-D-sparse entry in the mesh lane) fail
+the build on cost-model or variant-matrix drift, not just on missing keys.
+The 2-D mesh lane records ``chosen_within_2x`` but is NOT hard-gated: 8
+virtual CPU devices share one socket, so collective timings there are
+pathological by construction (see ``benchmarks/bench_parallel.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+class SchemaError(AssertionError):
+    """A BENCH artifact violated the schema contract."""
+
+
+def _require(cond, where: str, msg: str) -> None:
+    if not cond:
+        raise SchemaError(f"{where}: {msg}")
+
+
+def _require_keys(d: dict, keys: set, where: str) -> None:
+    _require(isinstance(d, dict), where, f"expected an object, got {type(d).__name__}")
+    missing = keys - d.keys()
+    _require(not missing, where, f"missing keys {sorted(missing)}")
+
+
+def check_sparse_sweep(doc: dict) -> None:
+    _require_keys(doc, {"density", "live_tile_fraction", "variants", "sparse_sweep"}, "$")
+    sweep = doc["sparse_sweep"]
+    _require(sweep.get("entries"), "$.sparse_sweep", "empty sparse sweep")
+    for i, e in enumerate(sweep["entries"]):
+        where = f"$.sparse_sweep.entries[{i}]"
+        _require_keys(
+            e,
+            {"density", "live_tile_fraction_sparse", "live_tile_fraction_dense",
+             "variants", "total_matches"},
+            where,
+        )
+        _require_keys(e["variants"], {"dense-fused", "sparse-xla"}, where + ".variants")
+
+
+def check_serving(doc: dict) -> None:
+    _require_keys(doc, {"serving"}, "$")
+    s = doc["serving"]
+    _require_keys(
+        s,
+        {"index_build_us", "index_bytes", "batches", "rebuild",
+         "amortized_speedup_batch64"},
+        "$.serving",
+    )
+    _require_keys(s["batches"], {"1", "8", "64"}, "$.serving.batches")
+    for b, e in s["batches"].items():
+        _require_keys(
+            e, {"us_per_call", "us_per_query", "qps", "total_matches"},
+            f"$.serving.batches[{b}]",
+        )
+    _require(s["amortized_speedup_batch64"] > 0, "$.serving",
+             "amortized_speedup_batch64 must be positive")
+
+
+def _check_planner_corpus(name: str, c: dict, *, where: str, gate_2x: bool) -> None:
+    _require_keys(
+        c,
+        {"summary", "chosen", "chosen_predicted", "entries", "best_measured",
+         "chosen_over_best", "chosen_within_2x"},
+        where,
+    )
+    _require(c["entries"], where, "no measured entries")
+    for i, e in enumerate(c["entries"]):
+        _require_keys(
+            e,
+            {"config", "predicted_s", "measured_us", "wire_bytes", "flops",
+             "compute_s", "comm_s"},
+            f"{where}.entries[{i}]",
+        )
+        _require(e["measured_us"] > 0, f"{where}.entries[{i}]",
+                 "measured_us must be positive")
+    if gate_2x:
+        # the acceptance bar: the chosen plan is within 2x of the best
+        # measured variant on every single-device benchmark corpus
+        _require(
+            c["chosen_within_2x"], where,
+            f"chosen plan {c['chosen']} is {c['chosen_over_best']:.2f}x "
+            f"the best measured ({c['best_measured']})",
+        )
+
+
+def check_planner(doc: dict) -> None:
+    _require_keys(doc, {"planner"}, "$")
+    pl = doc["planner"]
+    _require_keys(pl, {"profile", "corpora"}, "$.planner")
+    _require_keys(
+        pl["profile"],
+        {"matmul_gflops", "gather_gflops", "score_cost_ns", "device_kind"},
+        "$.planner.profile",
+    )
+    _require_keys(pl["corpora"], {"sparse_lowdens", "dense"}, "$.planner.corpora")
+    for name, c in pl["corpora"].items():
+        _check_planner_corpus(
+            name, c, where=f"$.planner.corpora.{name}", gate_2x=True
+        )
+    _require(
+        pl["corpora"]["sparse_lowdens"]["summary"]["density"] < 0.01,
+        "$.planner.corpora.sparse_lowdens", "not in the paper's sparse regime",
+    )
+    # The composed 2-D lane: planned AND measured on a 2-axis mesh, with
+    # the sparse checkerboard family present (the variant matrix's last
+    # cell — its absence means the planner gate regressed).
+    _require_keys(pl, {"mesh2d"}, "$.planner")
+    m2 = pl["mesh2d"]
+    _require_keys(m2, {"mesh", "corpora"}, "$.planner.mesh2d")
+    _require(len(m2["mesh"]) == 2, "$.planner.mesh2d.mesh", "expected 2 axes")
+    _require(m2["corpora"], "$.planner.mesh2d.corpora", "no corpora")
+    for name, c in m2["corpora"].items():
+        where = f"$.planner.mesh2d.corpora.{name}"
+        _check_planner_corpus(name, c, where=where, gate_2x=False)
+        configs = [e["config"] for e in c["entries"]]
+        _require(
+            any(cfg.startswith("2d/") and "sparse" in cfg for cfg in configs),
+            where, f"no measured 2d-sparse entry among {configs}",
+        )
+        _require(
+            any(cfg.startswith("2d/") and "dense" in cfg for cfg in configs),
+            where, f"no measured 2d-dense entry among {configs}",
+        )
+
+
+def check(doc: dict) -> None:
+    """Validate one BENCH artifact; raises :class:`SchemaError` on the first
+    violation."""
+    check_sparse_sweep(doc)
+    check_serving(doc)
+    check_planner(doc)
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else "BENCH_apss.json"
+    with open(path) as f:
+        doc = json.load(f)
+    try:
+        check(doc)
+    except SchemaError as e:
+        print(f"BENCH schema FAIL ({path}): {e}", file=sys.stderr)
+        return 1
+    print(f"BENCH schema OK ({path}): sweep + serving + planner (incl. 2-D lane)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

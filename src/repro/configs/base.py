@@ -13,7 +13,6 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

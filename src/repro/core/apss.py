@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.matches import Matches, extract_matches, merge_matches
+from repro.core.matches import Matches, extract_matches
 from repro.core.pruning import (
     PruneStats,
     block_prune_mask,

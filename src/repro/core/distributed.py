@@ -46,7 +46,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import pvary, shard_map
 from repro.core.apss import similarity_topk
@@ -1026,11 +1026,20 @@ def apss_2d(
     score accumulation over the column axis per ring step — paper Alg. 7's
     re-use of the vertical algorithm with the row communicator, verbatim in
     mesh-axis form.
+
+    ``D`` may be a :class:`~repro.core.sparse.SparseCorpus`: the checkerboard
+    cell ``(i, j)`` holds row shard ``i`` restricted to posting-list slice
+    ``j`` (host-side ``shard_dims`` pre-split — see ``_apss_2d_sparse`` for
+    the traced-vs-host tradeoff), the per-cell CSR pair rides the row-axis
+    ring, and the identical column-axis accumulations apply — both
+    representations run the one checkerboard driver through its
+    ``partials_fn`` seam (``_checkerboard_sweep``).
     """
     if isinstance(D, SparseCorpus):
-        raise NotImplementedError(
-            "sparse 2-D distribution is an open item (see ROADMAP.md); use "
-            "distribution='horizontal' or 'vertical' for SparseCorpus inputs"
+        return _apss_2d_sparse(
+            D, threshold, k, mesh, row_axis, col_axis,
+            accumulation=accumulation, block_rows=block_rows,
+            candidate_capacity=candidate_capacity, return_stats=return_stats,
         )
     q = mesh.shape[row_axis]
     r = mesh.shape[col_axis]
@@ -1107,36 +1116,44 @@ def _accumulate_block_scores(
     raise ValueError(f"unknown 2-D accumulation: {accumulation}")
 
 
-def _apss_2d_local(
-    D_loc, *, threshold, k, row_axis, col_axis, q, r, block_rows,
-    capacity, accumulation,
+def _block_clamp(block_rows: int, n_loc: int) -> int:
+    """Largest divisor of ``n_loc`` not exceeding ``block_rows``."""
+    bs = min(block_rows, n_loc)
+    while n_loc % bs:
+        bs -= 1
+    return bs
+
+
+def _checkerboard_sweep(
+    partials_fn, buf0, n_loc, *, threshold, k, row_axis, col_axis, q, r,
+    bs, capacity, accumulation,
 ):
-    n_loc, m_loc = D_loc.shape
+    """The one 2-D checkerboard driver both representations run through.
+
+    Ring over ``row_axis`` of an opaque traveling pytree ``buf0`` (a dense
+    wire-format cell or a sparse CSR pair); per ring step,
+    ``partials_fn(buf, blk) -> (bs, n_loc)`` scores local query block
+    ``blk`` against the traveling corpus cell in the local dimension slice
+    (einsum or gather-dot — the same seam the vertical dispatch uses), and
+    ``_accumulate_block_scores`` composes the column-axis accumulation.
+    """
+    nb = n_loc // bs
     me_r = lax.axis_index(row_axis)
     row_off = me_r * n_loc
-    bs = min(block_rows, n_loc)
-    while n_loc % bs:  # largest divisor of n_loc not exceeding block_rows
-        bs -= 1
-    nb = n_loc // bs
 
     def compute_vs(buf, s, matches, overflow):
         """Match my rows against the row block owned by (me_r - s)."""
         src = jnp.mod(me_r - s, q)
         col_off = src * n_loc
-        cur = _from_wire(buf, D_loc.dtype)
 
         def body(carry, blk):
-            ov = carry
-            qrows = lax.dynamic_slice_in_dim(D_loc, blk * bs, bs, axis=0)
-            A = jnp.einsum(
-                "im,jm->ij", qrows, cur, preferred_element_type=jnp.float32
-            )
+            A = partials_fn(buf, blk)
             mm, o = _accumulate_block_scores(
                 A, col_axis=col_axis, r=r, threshold=threshold, k=k,
                 capacity=capacity, accumulation=accumulation,
                 row_offset=row_off + blk * bs, col_offset=col_off,
             )
-            return ov + o, mm
+            return carry + o, mm
 
         ov, ms = lax.scan(body, jnp.int32(0), jnp.arange(nb))
         m_new = jax.tree.map(lambda x: x.reshape(n_loc, *x.shape[2:]), ms)
@@ -1144,18 +1161,145 @@ def _apss_2d_local(
 
     def step(s, carry):
         buf, matches, overflow = carry
-        nxt = lax.ppermute(buf, row_axis, perm=_ring_perm(q))
+        nxt = jax.tree.map(
+            lambda x: lax.ppermute(x, row_axis, perm=_ring_perm(q)), buf
+        )
         matches, overflow = compute_vs(buf, s, matches, overflow)
         return nxt, matches, overflow
 
     matches0 = _pvary(_empty_local_matches(n_loc, k), (row_axis, col_axis))
     buf, matches, overflow = lax.fori_loop(
         0, q - 1, step,
-        (_to_wire(D_loc), matches0, _pvary(jnp.int32(0), (row_axis, col_axis))),
+        (buf0, matches0, _pvary(jnp.int32(0), (row_axis, col_axis))),
     )
     matches, overflow = compute_vs(buf, q - 1, matches, overflow)
     overflow = lax.pmax(lax.pmax(overflow, col_axis), row_axis)
     return matches, ApssStats(overflow_rows=overflow)
+
+
+def _apss_2d_local(
+    D_loc, *, threshold, k, row_axis, col_axis, q, r, block_rows,
+    capacity, accumulation,
+):
+    n_loc, _ = D_loc.shape
+    bs = _block_clamp(block_rows, n_loc)
+
+    def partials(buf, blk):
+        qrows = lax.dynamic_slice_in_dim(D_loc, blk * bs, bs, axis=0)
+        return jnp.einsum(
+            "im,jm->ij", qrows, _from_wire(buf, D_loc.dtype),
+            preferred_element_type=jnp.float32,
+        )
+
+    return _checkerboard_sweep(
+        partials, _to_wire(D_loc), n_loc,
+        threshold=threshold, k=k, row_axis=row_axis, col_axis=col_axis,
+        q=q, r=r, bs=bs, capacity=capacity, accumulation=accumulation,
+    )
+
+
+def _apss_2d_sparse(
+    D: SparseCorpus, threshold, k, mesh, row_axis, col_axis, *,
+    accumulation, block_rows, candidate_capacity, return_stats,
+):
+    """Sparse 2-D checkerboard: sparse row ring ∘ posting-list-sharded
+    accumulation (the last cell of the variant matrix).
+
+    The dimension split is a HOST pre-split (``shard_dims``, like the sparse
+    vertical path): each checkerboard cell gets slice-relative indices and
+    the exact realized per-cell capacity ``cap_loc``, so the traveling CSR
+    pair is as narrow as the data allows. The alternative — a traced-side
+    split — would have to pad every cell to the GLOBAL row cap (traced
+    shapes cannot depend on the data), inflating ring wire volume by
+    ``≈ r·cap/cap_loc`` and scoring FLOPs to match; the price of the host
+    split is that (like sparse vertical) the entry is not traceable under
+    an outer ``jit`` (``planner.plan._has_host_stage``). See DESIGN.md §5.
+
+    Local (Lemma-1) pruning survives the composition: the compressed
+    accumulation thresholds per-cell partials at ``t/r`` exactly as the 1-D
+    vertical algorithm does, and the per-cell tile bounds stay conservative
+    (``core.pruning.checkerboard_live_mask``).
+    """
+    q = mesh.shape[row_axis]
+    r = mesh.shape[col_axis]
+    n = D.n
+    if n % q:
+        raise ValueError(f"n={n} must be a multiple of {row_axis}={q}")
+    C = candidate_capacity or default_candidate_capacity(k)
+    # Host split: (r, n, cap_loc) slice-relative indices/values + (r, n) nnz.
+    idx_s, val_s, nnz_s, m_loc = shard_dims(D, r)
+    cap_loc = idx_s.shape[-1]
+    n_loc = n // q
+    bs = _block_clamp(block_rows, n_loc)
+
+    if telemetry.enabled():
+        telemetry.record(telemetry.ApssStats(
+            variant=f"2d/{accumulation}",
+            n=n, m=D.m, devices=q * r, block_rows=bs, sparse=True,
+            hops=telemetry.twod_hops(
+                q, r, str(row_axis), str(col_axis), n_loc, D.m, 4, bs, C,
+                accumulation, cap_loc=cap_loc,
+            ),
+            flops=telemetry.sparse_join_flops(n_loc, n, cap_loc),
+            extra={
+                "mesh": {str(row_axis): q, str(col_axis): r},
+                "cap_loc": cap_loc,
+            },
+        ))
+
+    fn = functools.partial(
+        _apss_2d_sparse_local,
+        m_loc=m_loc, threshold=threshold, k=k, row_axis=row_axis,
+        col_axis=col_axis, q=q, r=r, block_rows=block_rows, capacity=C,
+        accumulation=accumulation,
+    )
+    # Same VMA caveat as every sparse schedule: no checker rule for the
+    # scatter/gather ops inside the sparse tile primitive.
+    out, stats = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            P(col_axis, row_axis, None),
+            P(col_axis, row_axis, None),
+            P(col_axis, row_axis),
+        ),
+        out_specs=(
+            Matches(
+                values=P(row_axis, None),
+                indices=P(row_axis, None),
+                counts=P(row_axis),
+            ),
+            ApssStats(overflow_rows=P()),
+        ),
+        check_vma=False,
+    )(jnp.asarray(idx_s), jnp.asarray(val_s), jnp.asarray(nnz_s))
+    if return_stats:
+        return out, stats
+    return out
+
+
+def _apss_2d_sparse_local(
+    idx, val, nnz, *, m_loc, threshold, k, row_axis, col_axis, q, r,
+    block_rows, capacity, accumulation,
+):
+    # Shard dims (1, n_loc, cap_loc) / (1, n_loc) → local cell.
+    idx, val, nnz = idx[0], val[0], nnz[0]
+    n_loc = idx.shape[0]
+    bs = _block_clamp(block_rows, n_loc)
+    sp_loc = SparseCorpus(idx, val, nnz, m_loc)
+
+    def partials(buf, blk):
+        qd = densify_rows(sp_loc, blk * bs, bs)  # (bs, m_loc)
+        bi, bv = buf
+        return gather_dot(qd, bi, bv)            # (bs, n_loc)
+
+    # The traveling cell is the CSR pair only: scoring sums every slot and
+    # padding is inert, so the nnz vector never needs to ride the ring.
+    return _checkerboard_sweep(
+        partials, (idx, val), n_loc,
+        threshold=threshold, k=k, row_axis=row_axis, col_axis=col_axis,
+        q=q, r=r, bs=bs, capacity=capacity, accumulation=accumulation,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -320,6 +320,50 @@ def sparse_block_prune_mask(
     )
 
 
+def checkerboard_live_mask(
+    cells,
+    threshold: jax.Array | float,
+    block_rows: int,
+    *,
+    use_minsize: bool = True,
+) -> jax.Array:
+    """Self-join LIVE mask under a 2-D checkerboard dimension split.
+
+    ``cells`` are the ``r`` dimension slices of one corpus
+    (:func:`~repro.core.sparse.dim_slices`) — each cell column of the
+    checkerboard sees only its ``m/r`` posting lists. The composed mask is
+    the OR over cells of the per-cell :func:`sparse_block_prune_mask` at the
+    Lemma-1 **local threshold** ``t/r``:
+
+    - *Lemma 1 (local pruning)*: a pair with global ``sim ≥ t`` has partial
+      similarity ``≥ t/r`` in at least one dimension slice, so its tile is
+      live in that cell's mask and survives the union — the bound stays
+      sound under the composition.
+    - *Per-cell minsize*: the minsize certificate assumes unit row norms,
+      but a cell of a normalized corpus has ``||y_cell|| ≤ 1`` and
+      Cauchy–Schwarz gives ``partial ≤ maxw_cell(x)·√|y_cell|·||y_cell||``,
+      so the unit-norm form only over-bounds — per-cell evaluation remains
+      conservative (asserted by ``tests/test_sparse_2d.py``).
+
+    The exact distributed rescoring (``_accumulate_block_scores``) needs
+    every cell's partials at the candidate union, so this mask cannot skip
+    partial-score compute without breaking exactness. It is the candidacy /
+    soundness view of the composed schedule — exercised by the soundness
+    tests and the hook for a future per-cell worklist path; it is NOT part
+    of the telemetry record (evaluating it costs device work, which
+    telemetry never performs).
+    """
+    t_local = local_threshold(threshold, len(cells))
+    live = None
+    for cell in cells:
+        cell_live = sparse_block_prune_mask(
+            cell, cell, t_local, block_rows,
+            use_minsize=use_minsize, normalized=True,
+        )
+        live = cell_live if live is None else (live | cell_live)
+    return live
+
+
 def local_threshold(threshold: float | jax.Array, num_shards: int) -> jax.Array:
     """Paper Lemma 1: local pruning threshold ``t_local = t / p``.
 

@@ -220,6 +220,25 @@ def shard_dims(sp: SparseCorpus, p: int) -> tuple[np.ndarray, np.ndarray, np.nda
     return out_idx, out_val, counts.astype(np.int32), m_loc
 
 
+def dim_slices(sp: SparseCorpus, p: int) -> list[SparseCorpus]:
+    """The ``p`` per-slice corpora of :func:`shard_dims` as SparseCorpus views.
+
+    Slice ``d`` holds every row restricted to dimensions ``[d·m/p,
+    (d+1)·m/p)`` with SLICE-RELATIVE indices and ``m = m/p`` — exactly the
+    cell contents of one checkerboard column in ``apss_2d``. Used by the
+    per-cell pruning bounds (``core.pruning.checkerboard_live_mask``) and
+    tests; the distributed path consumes the stacked arrays directly.
+    """
+    idx_s, val_s, nnz_s, m_loc = shard_dims(sp, p)
+    return [
+        SparseCorpus(
+            jnp.asarray(idx_s[d]), jnp.asarray(val_s[d]),
+            jnp.asarray(nnz_s[d]), m_loc,
+        )
+        for d in range(p)
+    ]
+
+
 # ---------------------------------------------------------------------------
 # Scoring primitives
 # ---------------------------------------------------------------------------

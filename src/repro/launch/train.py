@@ -14,13 +14,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
-import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.distributed import StepTimer, use_mesh
@@ -115,17 +112,15 @@ def make_gat_train_step(cfg: gnn.GATConfig, hp: TrainHyperparams = TrainHyperpar
 
 
 def make_recsys_train_step(cfg, hp: TrainHyperparams = TrainHyperparams()):
-    if isinstance(cfg, recsys.TwoTowerConfig):
-        loss = lambda p, b: recsys.two_tower_loss(p, cfg, b)
-    elif isinstance(cfg, recsys.Bert4RecConfig):
-        loss = lambda p, b: recsys.bert4rec_loss(p, cfg, b)
-    elif isinstance(cfg, recsys.DINConfig):
-        loss = lambda p, b: recsys.din_loss(p, cfg, b)
-    elif isinstance(cfg, recsys.BSTConfig):
-        loss = lambda p, b: recsys.bst_loss(p, cfg, b)
-    else:
-        raise TypeError(type(cfg))
-    return make_train_step(loss, hp)
+    for kind, fn in (
+        (recsys.TwoTowerConfig, recsys.two_tower_loss),
+        (recsys.Bert4RecConfig, recsys.bert4rec_loss),
+        (recsys.DINConfig, recsys.din_loss),
+        (recsys.BSTConfig, recsys.bst_loss),
+    ):
+        if isinstance(cfg, kind):
+            return make_train_step(lambda p, b: fn(p, cfg, b), hp)
+    raise TypeError(type(cfg))
 
 
 # ---------------------------------------------------------------------------
@@ -167,14 +162,16 @@ def train_loop(
             vocab_size=cfg.vocab_size, batch_size=4,
             seq_len=min(128, 4 * cfg.loss_chunk), seed=0,
         )
-        get_batch = lambda s: jax.tree.map(jnp.asarray, pipe.get_batch(s))
+        def get_batch(s):
+            return jax.tree.map(jnp.asarray, pipe.get_batch(s))
     elif arch_def.family == "gnn":
         params = gnn.init_gat(key, cfg)
         step_fn = make_gat_train_step(cfg, hp)
         pipe = GraphPipeline(n_nodes=512, n_edges=4096, d_feat=cfg.d_feat,
                              n_classes=cfg.n_classes)
         g = jax.tree.map(jnp.asarray, pipe.full_graph())
-        get_batch = lambda s: g
+        def get_batch(s):
+            return g
     else:
         if isinstance(cfg, recsys.TwoTowerConfig):
             params = recsys.init_two_tower(key, cfg)
@@ -195,7 +192,9 @@ def train_loop(
             pipe = RecsysPipeline(n_items=cfg.n_items, batch_size=32,
                                   history_len=cfg.seq_len - 1, kind="ctr")
         step_fn = make_recsys_train_step(cfg, hp)
-        get_batch = lambda s: jax.tree.map(jnp.asarray, pipe.get_batch(s))
+
+        def get_batch(s):
+            return jax.tree.map(jnp.asarray, pipe.get_batch(s))
 
     opt_state = adamw_init(params)
     start_step = 0

@@ -22,7 +22,6 @@ Params are plain nested dicts; sharding is annotated via
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -23,9 +23,8 @@ class AdamWState(NamedTuple):
 def adamw_init(params) -> AdamWState:
     # m and v must be DISTINCT buffers (donation would otherwise see the
     # same buffer twice).
-    zeros = lambda: jax.tree.map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params
-    )
+    def zeros():
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
 
 

@@ -240,8 +240,19 @@ def variant_hops(
         return telemetry.twod_hops(
             q, r, axes[0], axes[1], n_loc, s.m, s.itemsize,
             min(cfg.block_rows, n_loc), _capacity(k), cfg.accumulation,
+            cap_loc=_cell_cap(s, r) if cfg.sparse else None,
         )
     raise ValueError(f"unknown variant kind: {cfg.kind}")
+
+
+def _cell_cap(s: CorpusSummary, r: int) -> int:
+    """Planner-side estimate of the 2-D cell capacity ``cap_loc`` — the
+    balanced split ``⌈cap/r⌉``. The realized value (known only after the
+    host ``shard_dims`` pre-split) is the max per-slice row count and grows
+    toward ``cap`` under posting-list skew; the runtime telemetry record
+    carries the exact number, so ``bench_planner`` surfaces any drift as a
+    predicted-vs-measured gap rather than silent model error."""
+    return max(1, -(-s.cap // r))
 
 
 def variant_flops(cfg: VariantConfig, s: CorpusSummary, p: int) -> float:

@@ -14,8 +14,9 @@ among the variety to the caller. This module closes that loop:
 3. :func:`plan_apss` prices each candidate with the closed-form cost
    models (``planner.costmodel``, parameterized by the calibrated
    hardware profile) and returns a ranked :class:`Plan`; with
-   ``autotune=True`` the top-2 are additionally microbenchmarked and the
-   measured winner is chosen.
+   ``autotune=True`` the best-predicted config of each of the top
+   ``autotune_top`` (default 3) variant families is additionally
+   microbenchmarked and the measured winner is chosen.
 
 ``core.apss.similarity_topk(..., variant="auto")``,
 ``core.distributed.apss(..., distribution="auto")`` and
@@ -271,17 +272,21 @@ def candidate_configs(
                             "vertical", sparse, b, accumulation=acc,
                         )
                     )
-    if len(names) == 2 and False in reps:  # 2-D is dense-only (ROADMAP)
+    if len(names) == 2:
         q, r = sizes[names[0]], sizes[names[1]]
+        # Both representations split the dimension axis r ways: dense as
+        # P(row, col) column shards, sparse as shard_dims posting slices —
+        # m must divide either way.
         if s.n % q == 0 and s.m % r == 0:
             n_loc = s.n // q
-            for b in blocks:
-                for acc in ("allreduce", "compressed"):
-                    cfgs.append(
-                        VariantConfig(
-                            "2d", False, min(b, n_loc), accumulation=acc,
+            for sparse in reps:
+                for b in blocks:
+                    for acc in ("allreduce", "compressed"):
+                        cfgs.append(
+                            VariantConfig(
+                                "2d", sparse, min(b, n_loc), accumulation=acc,
+                            )
                         )
-                    )
     return list(dict.fromkeys(cfgs))
 
 
@@ -359,7 +364,7 @@ def _has_host_stage(cfg: VariantConfig) -> bool:
     ``shard_dims``) and therefore cannot be traced under jit."""
     if cfg.kind == "blocked" and cfg.sparse and cfg.use_kernel:
         return True  # apss_sparse_compacted: host-compacted worklist
-    if cfg.kind == "vertical" and cfg.sparse:
+    if cfg.kind in ("vertical", "2d") and cfg.sparse:
         return True  # shard_dims: host posting-list split
     return False
 

@@ -189,6 +189,13 @@ def csr_block_bytes(rows: int, cap: int) -> int:
     return rows * cap * 8 + rows * 4
 
 
+def csr_cell_bytes(rows: int, cap: int) -> int:
+    """Wire bytes of a traveling 2-D checkerboard CSR cell: (idx i32 + val
+    f32)·cap_loc only — the sparse 2-D ring ships no nnz vector (scoring
+    sums every slot and padding slots are arithmetically inert)."""
+    return rows * cap * 8
+
+
 def matches_bytes(rows: int, k: int) -> int:
     """Wire bytes of a Matches caravan: values f32 + indices i32 + counts i32."""
     return rows * (8 * k + 4)
@@ -315,17 +322,27 @@ def twod_hops(
     block_rows: int,
     capacity: int,
     accumulation: str,
+    cap_loc: int | None = None,
 ) -> tuple[CollectiveHop, ...]:
-    """2-D checkerboard: a row-axis ring of ``(n_loc, m_loc)`` blocks composed
+    """2-D checkerboard: a row-axis ring of per-cell corpus blocks composed
     with a vertical accumulation of each ``(bs, n_loc)`` partial tile per ring
-    step (paper Alg. 7)."""
+    step (paper Alg. 7).
+
+    ``cap_loc`` switches the ring payload to the sparse cell: a dense cell is
+    ``(n_loc, m/r)`` values, a sparse cell the per-cell CSR pair of width
+    ``cap_loc`` (the realized max per-cell row count after ``shard_dims``).
+    The inner accumulation hops are representation-agnostic either way — they
+    carry candidate ids/scores, never corpus payloads."""
     hops: list[CollectiveHop] = []
     if q > 1:
+        if cap_loc is None:
+            block = dense_block_bytes(n_loc, m // r, itemsize)
+            payload = "dense_block"
+        else:
+            block = csr_cell_bytes(n_loc, cap_loc)
+            payload = "csr_cell"
         hops.append(
-            CollectiveHop(
-                "ppermute", "dense_block", row_axis,
-                dense_block_bytes(n_loc, m // r, itemsize), q - 1,
-            )
+            CollectiveHop("ppermute", payload, row_axis, block, q - 1)
         )
     inner = vertical_hops(
         accumulation, col_axis, r, n_loc, block_rows, capacity, cols=n_loc

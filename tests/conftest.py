@@ -8,11 +8,48 @@ This must run before jax/jaxlib first parse XLA_FLAGS, hence conftest.
 """
 
 import os
+import zlib
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+
+def shard_of(path: str, num_shards: int) -> int:
+    """Stable file → shard assignment for CI tier-1 sharding.
+
+    crc32, not ``hash()``: assignment must agree across processes and
+    Python versions (PYTHONHASHSEED randomizes str hash). Sharding is by
+    test FILE so a module-scoped fixture is built in exactly one shard
+    (session-scoped fixtures are per-process either way: every shard that
+    collects a file using one builds its own copy).
+    """
+    return zlib.crc32(path.encode()) % num_shards
+
+
+def pytest_collection_modifyitems(config, items):
+    """Optional tier-1 sharding for the CI matrix.
+
+    ``PYTEST_NUM_SHARDS=N`` + ``PYTEST_SHARD=1..N`` select a stable,
+    disjoint, exhaustive partition of the test files; unset (the default,
+    and every local run) leaves collection untouched.
+    """
+    num = int(os.environ.get("PYTEST_NUM_SHARDS", "1") or 1)
+    if num <= 1:
+        return
+    shard = int(os.environ.get("PYTEST_SHARD", "1"))
+    if not 1 <= shard <= num:
+        raise pytest.UsageError(
+            f"PYTEST_SHARD={shard} out of range 1..{num}"
+        )
+    keep, drop = [], []
+    for item in items:
+        fname = item.nodeid.split("::", 1)[0]
+        (keep if shard_of(fname, num) == shard - 1 else drop).append(item)
+    if drop:
+        items[:] = keep
+        config.hook.pytest_deselected(items=drop)
 
 
 @pytest.fixture(scope="session")

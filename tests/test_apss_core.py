@@ -1,6 +1,5 @@
 """Unit tests: single-device APSS core (oracle, blocked, matches, pruning)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

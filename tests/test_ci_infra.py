@@ -1,0 +1,247 @@
+"""CI infrastructure as code (ISSUE 5 satellites): the BENCH schema gate
+(``benchmarks/check_schema.py``, formerly an inline workflow heredoc) and
+the tier-1 shard partition (``tests/conftest.py``) are real, unit-tested
+modules — a schema or sharding bug fails tier-1 locally, not just a CI run
+three pushes later.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+import conftest
+from benchmarks import check_schema
+from benchmarks.check_schema import SchemaError, check
+
+
+# -- a minimal valid BENCH artifact ------------------------------------------
+
+
+def _entry(config="blocked[sparse,b=128]", us=10.0):
+    return {
+        "config": config, "predicted_s": 0.01, "measured_us": us,
+        "wire_bytes": 0, "flops": 1.0, "compute_s": 0.01, "comm_s": 0.0,
+    }
+
+
+def _corpus_rec(entries, within=True):
+    return {
+        "summary": {"density": 0.005},
+        "chosen": entries[0]["config"],
+        "chosen_predicted": entries[0]["config"],
+        "entries": entries,
+        "best_measured": entries[0]["config"],
+        "chosen_over_best": 1.0 if within else 3.0,
+        "chosen_within_2x": within,
+    }
+
+
+def _valid_doc():
+    return {
+        "density": 0.01, "live_tile_fraction": 0.5, "variants": {},
+        "sparse_sweep": {"entries": [{
+            "density": 0.001, "live_tile_fraction_sparse": 0.1,
+            "live_tile_fraction_dense": 0.2, "total_matches": 5,
+            "variants": {"dense-fused": 1.0, "sparse-xla": 2.0},
+        }]},
+        "serving": {
+            "index_build_us": 1.0, "index_bytes": 10, "rebuild": {},
+            "amortized_speedup_batch64": 3.0,
+            "batches": {
+                b: {"us_per_call": 1, "us_per_query": 1, "qps": 1,
+                    "total_matches": 1}
+                for b in ("1", "8", "64")
+            },
+        },
+        "planner": {
+            "profile": {"matmul_gflops": 1, "gather_gflops": 1,
+                        "score_cost_ns": 1, "device_kind": "cpu"},
+            "corpora": {
+                "sparse_lowdens": _corpus_rec([_entry()]),
+                "dense": _corpus_rec([_entry("blocked[dense,b=128]")]),
+            },
+            "mesh2d": {
+                "mesh": {"data": 4, "model": 2},
+                "corpora": {"sparse_lowdens": _corpus_rec([
+                    _entry("2d/compressed[sparse,b=128]"),
+                    _entry("2d/allreduce[dense,b=128]"),
+                ])},
+            },
+        },
+    }
+
+
+def test_valid_doc_passes():
+    check(_valid_doc())
+
+
+@pytest.mark.parametrize("path", [
+    ("sparse_sweep",),
+    ("serving", "batches", "64"),
+    ("planner", "profile", "gather_gflops"),
+    ("planner", "mesh2d"),
+    ("planner", "corpora", "sparse_lowdens", "entries", 0, "measured_us"),
+])
+def test_missing_key_fails_with_path(path):
+    doc = _valid_doc()
+    node = doc
+    for k in path[:-1]:
+        node = node[k]
+    del node[path[-1]]
+    with pytest.raises(SchemaError):
+        check(doc)
+
+
+def test_within_2x_gate_applies_to_single_device_lanes_only():
+    """The corpora lanes hard-gate chosen_within_2x; the mesh2d lane records
+    it but doesn't gate (8 virtual devices share one socket — collective
+    timings there are pathological by construction)."""
+    doc = _valid_doc()
+    doc["planner"]["mesh2d"]["corpora"]["sparse_lowdens"] = _corpus_rec(
+        [_entry("2d/compressed[sparse,b=128]"),
+         _entry("2d/allreduce[dense,b=128]")],
+        within=False,
+    )
+    check(doc)  # mesh2d miss: recorded, not fatal
+    doc = _valid_doc()
+    doc["planner"]["corpora"]["dense"] = _corpus_rec(
+        [_entry("blocked[dense,b=128]")], within=False
+    )
+    with pytest.raises(SchemaError, match=r"chosen plan"):
+        check(doc)
+
+
+def test_mesh2d_requires_both_2d_representations():
+    """The mesh lane must measure the 2-D family in BOTH representations —
+    a missing sparse entry means the planner gate regressed."""
+    for drop in ("sparse", "dense"):
+        doc = _valid_doc()
+        rec = doc["planner"]["mesh2d"]["corpora"]["sparse_lowdens"]
+        rec["entries"] = [e for e in rec["entries"] if drop not in e["config"]]
+        with pytest.raises(SchemaError, match=f"2d-{drop}"):
+            check(doc)
+
+
+def test_sparse_regime_gate():
+    doc = _valid_doc()
+    doc["planner"]["corpora"]["sparse_lowdens"]["summary"]["density"] = 0.2
+    with pytest.raises(SchemaError, match="sparse regime"):
+        check(doc)
+
+
+def test_cli_roundtrip(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_valid_doc()))
+    assert check_schema.main([str(good)]) == 0
+    bad_doc = _valid_doc()
+    del bad_doc["serving"]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_doc))
+    assert check_schema.main([str(bad)]) == 1
+    err = capsys.readouterr().err
+    assert "$.serving" in err or "serving" in err
+
+
+def test_repo_bench_artifact_is_valid():
+    """The committed BENCH_apss.json must satisfy the same gate CI applies
+    to the smoke artifact — schema changes ship with a regenerated
+    artifact, never ahead of it."""
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_apss.json"
+    check(json.loads(path.read_text()))
+
+
+def test_error_messages_are_path_qualified():
+    doc = _valid_doc()
+    del doc["planner"]["mesh2d"]["corpora"]["sparse_lowdens"]["entries"][1][
+        "wire_bytes"
+    ]
+    with pytest.raises(SchemaError, match=r"mesh2d\.corpora\.sparse_lowdens"):
+        check(doc)
+
+
+# -- tier-1 sharding ----------------------------------------------------------
+
+
+def test_shard_assignment_is_a_partition():
+    """Every test file lands in exactly one shard, for any shard count."""
+    files = [f"tests/test_{name}.py" for name in (
+        "apss_core", "apss_distributed", "sparse", "sparse_2d", "planner",
+        "telemetry", "serving", "kernels", "ci_infra",
+    )]
+    for num in (2, 3, 5):
+        buckets = [[] for _ in range(num)]
+        for f in files:
+            buckets[conftest.shard_of(f, num)].append(f)
+        assert sorted(sum(buckets, [])) == sorted(files)  # exhaustive
+        assert all(
+            conftest.shard_of(f, num) == conftest.shard_of(f, num)
+            for f in files
+        )  # deterministic
+
+
+def test_shard_of_is_stable():
+    """Pinned values: the assignment must never drift across Python or
+    pytest versions (a silent re-partition would un-run half the suite
+    until every matrix cell is green again)."""
+    import zlib
+
+    f = "tests/test_sparse_2d.py"
+    assert conftest.shard_of(f, 2) == zlib.crc32(f.encode()) % 2
+
+
+def test_modifyitems_respects_env(monkeypatch):
+    class Item:
+        def __init__(self, nodeid):
+            self.nodeid = nodeid
+
+    class Hook:
+        def __init__(self):
+            self.deselected = []
+
+        def pytest_deselected(self, items):
+            self.deselected.extend(items)
+
+    class Config:
+        def __init__(self):
+            self.hook = Hook()
+
+    all_items = [Item(f"tests/test_{i}.py::test_x") for i in range(10)]
+    # no env → untouched
+    monkeypatch.delenv("PYTEST_NUM_SHARDS", raising=False)
+    items = list(all_items)
+    conftest.pytest_collection_modifyitems(Config(), items)
+    assert items == all_items
+    # 2 shards → disjoint + exhaustive, deselected reported
+    kept = []
+    for shard in ("1", "2"):
+        monkeypatch.setenv("PYTEST_NUM_SHARDS", "2")
+        monkeypatch.setenv("PYTEST_SHARD", shard)
+        items = list(all_items)
+        cfg = Config()
+        conftest.pytest_collection_modifyitems(cfg, items)
+        assert len(items) + len(cfg.hook.deselected) == len(all_items)
+        kept.extend(i.nodeid for i in items)
+    assert sorted(kept) == sorted(i.nodeid for i in all_items)
+    # out-of-range shard id fails loudly
+    monkeypatch.setenv("PYTEST_SHARD", "3")
+    with pytest.raises(pytest.UsageError):
+        conftest.pytest_collection_modifyitems(Config(), list(all_items))
+
+
+def test_ci_workflow_wires_the_gate():
+    """The workflow must call the schema module (not a heredoc), set the
+    virtual-device count job-wide, and fan the matrix out over python and
+    jax versions with sharded tier-1."""
+    wf = (
+        pathlib.Path(__file__).resolve().parent.parent
+        / ".github" / "workflows" / "ci.yml"
+    ).read_text()
+    assert "benchmarks.check_schema" in wf
+    assert "xla_force_host_platform_device_count=8" in wf
+    assert "fail-fast: false" in wf
+    assert "PYTEST_NUM_SHARDS" in wf
+    assert '"3.10"' in wf and '"3.11"' in wf
+    assert "upload-artifact" in wf
+    assert "ruff check" in wf and "ruff format --check" in wf
+    assert "python - <<" not in wf  # the heredoc is gone for good

@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.apss import apss_reference, normalize_rows, similarity_topk
 from repro.core.graph import match_set
-from repro.core.sparse import from_dense, to_dense
+from repro.core.sparse import to_dense
 from repro.data.sparse import sparse_zipfian_corpus
 from repro.planner import (
     CalibrationProfile,

@@ -272,11 +272,17 @@ def test_sparse_vertical_exact(mesh8_model, sparse128, accumulation):
     _check(got, ref)
 
 
-def test_sparse_2d_raises_not_implemented(mesh4x2, sparse128):
+def test_sparse_2d_exact(mesh4x2, sparse128):
+    """The last cell of the variant matrix: sparse ring ∘ posting-list-
+    sharded accumulation (full coverage in tests/test_sparse_2d.py)."""
     from repro.core.distributed import apss_2d
 
-    with pytest.raises(NotImplementedError):
-        apss_2d(sparse128[0], T, K, mesh4x2)
+    sp, ref = sparse128
+    got = apss_2d(
+        sp, T, K, mesh4x2, accumulation="compressed", block_rows=16,
+        candidate_capacity=128,
+    )
+    _check(got, ref)
 
 
 def test_sparse_hierarchical_exact(sparse128):

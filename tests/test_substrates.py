@@ -38,7 +38,8 @@ from repro.optim import (
 def test_adamw_converges_on_quadratic():
     params = {"w": jnp.asarray([5.0, -3.0])}
     opt = adamw_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     for _ in range(200):
         g = jax.grad(loss)(params)
         params, opt, _ = adamw_update(

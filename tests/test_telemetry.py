@@ -163,6 +163,47 @@ def test_serving_query_records_live_fraction():
     assert rec.extra["batch"] == 8
 
 
+def test_sparse_2d_composed_wire_volume():
+    """Composed 2-D schedule: the row-axis ring ships the per-cell CSR pair
+    exactly ``q-1`` times at ``csr_cell_bytes(n_loc, cap_loc)`` per hop
+    (``cap_loc`` the REALIZED post-split width, not the global cap); the
+    inner accumulation hops are representation-agnostic — identical to the
+    dense record's — and run once per ring step (hop counts ×q)."""
+    from repro.compat import make_mesh
+    from repro.core.distributed import apss_2d
+    from repro.core.sparse import shard_dims
+    from repro.planner.telemetry import csr_cell_bytes
+
+    D = _dense(128, 1024, 0.05, seed=8)
+    sp = from_dense(D)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    q, r, n_loc = 4, 2, 32
+    cap_loc = shard_dims(sp, r)[0].shape[-1]
+    with CommLog() as log:
+        apss_2d(
+            jnp.asarray(D), T, K, mesh, accumulation="compressed",
+            block_rows=16,
+        )
+        apss_2d(sp, T, K, mesh, accumulation="compressed", block_rows=16)
+    dense_rec, sparse_rec = log.records
+    assert sparse_rec.sparse and sparse_rec.extra["cap_loc"] == cap_loc
+
+    (ring,) = [h for h in sparse_rec.hops if h.payload == "csr_cell"]
+    assert ring.op == "ppermute" and ring.axis == "data"
+    assert ring.hops == q - 1
+    assert ring.bytes_per_hop == csr_cell_bytes(n_loc, cap_loc)
+
+    inner_s = [h for h in sparse_rec.hops if h.payload != "csr_cell"]
+    inner_d = [h for h in dense_rec.hops if h.payload != "dense_block"]
+    assert inner_s == inner_d  # candidate ids/scores never carry the corpus
+    assert inner_s and all(h.hops % q == 0 for h in inner_s)
+
+    # The sparse cell undercuts the dense cell's (n_loc, m/r) payload.
+    db = dense_rec.bytes_by_payload()["dense_block"]
+    sb = sparse_rec.bytes_by_payload()["csr_cell"]
+    assert sb < 0.25 * db  # 5% density: 8·cap_loc ≪ 4·m/r
+
+
 def test_vertical_compressed_vs_allreduce_volume(mesh8_model):
     """Lemma-1 compaction: the compressed accumulation's collective volume
     is O(p·C) per row vs the allreduce's O(n) — the paper's 10-100× score
