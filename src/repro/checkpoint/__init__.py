@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
     save_checkpoint,
     load_checkpoint,
+    CheckpointCorruptionError,
     CheckpointManager,
 )

@@ -1,15 +1,24 @@
 """Sharded, atomic, async checkpointing with keep-last-k + auto-resume.
 
-Fault-tolerance contract (DESIGN.md §5):
+Fault-tolerance contract (DESIGN.md §5, §8):
 
 - **Atomic**: a checkpoint is written to ``step_XXXX.tmp/`` and renamed to
   ``step_XXXX/`` only after every leaf and the manifest are fsync'd — a
   crash mid-write can never corrupt the restore path.
-- **Async**: ``CheckpointManager.save(..., blocking=False)`` snapshots to
-  host memory on the step path and writes on a background thread (the write
-  never blocks the training step; the snapshot is a device→host copy).
+- **Verified**: every leaf carries a blake2b digest in the manifest;
+  ``load_checkpoint`` re-hashes on read, so a truncated or bit-flipped
+  leaf raises :class:`CheckpointCorruptionError` instead of reshaping
+  garbage into the restored state. Pre-digest checkpoints (no ``blake2b``
+  key) still load.
+- **Async, never silent**: ``CheckpointManager.save(..., blocking=False)``
+  snapshots to host memory on the step path and writes on a background
+  thread. A failed background write (disk full, permissions) is captured
+  and re-raised on the NEXT ``wait()``/``save()`` call — an async failure
+  can surface one step late, but it always surfaces.
 - **Keep-last-k** with monotonic step directories; ``latest_step()`` +
-  ``restore()`` give crash auto-resume.
+  ``restore()`` give crash auto-resume. ``restore(fallback=True)`` walks
+  back to the newest UNcorrupted kept step, so one bad write costs
+  ``keep``-window progress, not the job.
 - **Preemption**: ``install_preemption_handler`` checkpoints on
   SIGTERM/SIGINT before the scheduler reclaims the node.
 - **Elastic**: checkpoints store full (unsharded) host arrays per leaf, so
@@ -23,12 +32,14 @@ path.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import shutil
 import signal
 import threading
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -36,6 +47,10 @@ import numpy as np
 
 _MANIFEST = "manifest.json"
 _STEP_RE = re.compile(r"^step_(\d{10})$")
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint leaf failed its integrity check (digest/shape/read)."""
 
 
 def _dtype_from_name(name: str) -> np.dtype:
@@ -75,14 +90,16 @@ def save_checkpoint(state, directory: str, step: int) -> str:
         fname = name.replace("/", "__") + ".npy"
         # Raw-byte serialization: np.save cannot round-trip ml_dtypes
         # (bfloat16 etc.), so store bytes + record the true dtype.
-        raw = np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.uint8)
+        payload = np.ascontiguousarray(arr).tobytes()
+        raw = np.frombuffer(payload, np.uint8)
         with open(os.path.join(tmp, fname), "wb") as f:
             np.save(f, raw)
             f.flush()
             os.fsync(f.fileno())
         manifest["leaves"].append(
             {"name": name, "file": fname, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)}
+             "dtype": str(arr.dtype),
+             "blake2b": hashlib.blake2b(payload, digest_size=16).hexdigest()}
         )
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
@@ -100,16 +117,41 @@ def load_checkpoint(directory: str, step: int, like=None):
     With ``like`` (a pytree of the same structure, e.g. from
     ``jax.eval_shape``), the result is unflattened into that structure;
     otherwise a flat ``{name: array}`` dict is returned.
+
+    Every leaf is verified against its manifest blake2b digest before
+    reshaping; a digest mismatch, unreadable file, or byte-count mismatch
+    raises :class:`CheckpointCorruptionError` naming the offending leaf.
     """
     path = os.path.join(directory, f"step_{step:010d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
     by_name = {}
     for leaf in manifest["leaves"]:
-        raw = np.load(os.path.join(path, leaf["file"]))
+        fpath = os.path.join(path, leaf["file"])
+        try:
+            raw = np.load(fpath)
+            payload = raw.tobytes()
+        except Exception as e:
+            raise CheckpointCorruptionError(
+                f"unreadable checkpoint leaf {fpath}: {e}"
+            ) from e
+        digest = leaf.get("blake2b")  # absent in pre-digest checkpoints
+        if digest is not None:
+            got = hashlib.blake2b(payload, digest_size=16).hexdigest()
+            if got != digest:
+                raise CheckpointCorruptionError(
+                    f"checksum mismatch for leaf {fpath}: "
+                    f"manifest {digest}, file {got}"
+                )
         dtype = _dtype_from_name(leaf["dtype"])
+        expect = int(np.prod(leaf["shape"])) * dtype.itemsize
+        if len(payload) != expect:
+            raise CheckpointCorruptionError(
+                f"truncated checkpoint leaf {fpath}: "
+                f"{len(payload)} bytes, expected {expect}"
+            )
         by_name[leaf["name"]] = (
-            np.frombuffer(raw.tobytes(), dtype=dtype)
+            np.frombuffer(payload, dtype=dtype)
             .reshape(leaf["shape"])
             .copy()
         )
@@ -130,6 +172,7 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         self._writer: threading.Thread | None = None
+        self._async_error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # -- discovery ---------------------------------------------------------
@@ -150,7 +193,9 @@ class CheckpointManager:
 
     def save(self, state, step: int, *, blocking: bool = True) -> None:
         # Serialize against any in-flight async writer (same-step collisions
-        # would otherwise race on the .tmp directory).
+        # would otherwise race on the .tmp directory). wait() also re-raises
+        # any captured async-write failure, so a silent disk-full/permission
+        # error from a previous background write surfaces here.
         self.wait()
         if step in self.all_steps():
             return
@@ -161,25 +206,61 @@ class CheckpointManager:
         # Snapshot to host on the caller's thread (cheap device→host copy),
         # then write in the background so the step path never blocks on IO.
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
-        self.wait()
         self._writer = threading.Thread(
             target=self._write_and_gc, args=(host_state, step), daemon=True
         )
         self._writer.start()
 
     def _write_and_gc(self, host_state, step: int) -> None:
-        save_checkpoint(host_state, self.directory, step)
-        self._gc()
+        # Capture, never swallow: a daemon thread's uncaught exception is
+        # lost forever, so stash it for the next wait()/save() to re-raise.
+        try:
+            save_checkpoint(host_state, self.directory, step)
+            self._gc()
+        except BaseException as e:  # noqa: BLE001 — re-raised on wait()
+            self._async_error = e
 
     def wait(self) -> None:
+        """Join any in-flight async write; re-raise a captured write error."""
         if self._writer is not None and self._writer.is_alive():
             self._writer.join()
+        if self._async_error is not None:
+            err, self._async_error = self._async_error, None
+            raise err
 
-    def restore(self, like=None, step: int | None = None):
-        step = step if step is not None else self.latest_step()
-        if step is None:
+    def restore(self, like=None, step: int | None = None, *,
+                fallback: bool = False):
+        """Load ``step`` (default: latest). Returns ``(state, step)``.
+
+        With ``fallback=True``, a step that fails integrity checks
+        (:class:`CheckpointCorruptionError`) is skipped with a warning and
+        the next-older kept step is tried — resume costs one checkpoint
+        window instead of the job. Raises only when every kept step is
+        corrupt; returns ``(None, None)`` when none exist at all.
+        """
+        self.wait()
+        if step is not None:
+            candidates = [step]
+        else:
+            candidates = sorted(self.all_steps(), reverse=True)
+        if not candidates:
             return None, None
-        return load_checkpoint(self.directory, step, like=like), step
+        last_err: Exception | None = None
+        for s in candidates:
+            try:
+                return load_checkpoint(self.directory, s, like=like), s
+            except CheckpointCorruptionError as e:
+                if not fallback:
+                    raise
+                warnings.warn(
+                    f"checkpoint step {s} corrupt ({e}); "
+                    f"falling back to previous kept step",
+                    stacklevel=2,
+                )
+                last_err = e
+        raise CheckpointCorruptionError(
+            f"every kept checkpoint in {self.directory} is corrupt"
+        ) from last_err
 
     def _gc(self) -> None:
         steps = self.all_steps()

@@ -1045,7 +1045,11 @@ def apss_2d(
     r = mesh.shape[col_axis]
     C = candidate_capacity or default_candidate_capacity(k)
 
+    ticker = None
     if telemetry.enabled():
+        from repro.distributed.straggler import StepTicker
+
+        ticker = StepTicker()
         n, m = D.shape
         n_loc = n // q
         bs = min(block_rows, n_loc)
@@ -1060,12 +1064,14 @@ def apss_2d(
             ),
             flops=telemetry.dense_join_flops(n_loc, n, m) / r,
             extra={"mesh": {str(row_axis): q, str(col_axis): r}},
+            step_ticker=ticker,
         ))
 
     fn = functools.partial(
         _apss_2d_local,
         threshold=threshold, k=k, row_axis=row_axis, col_axis=col_axis,
         q=q, r=r, block_rows=block_rows, capacity=C, accumulation=accumulation,
+        ticker=ticker,
     )
     out, stats = shard_map(
         fn,
@@ -1126,7 +1132,7 @@ def _block_clamp(block_rows: int, n_loc: int) -> int:
 
 def _checkerboard_sweep(
     partials_fn, buf0, n_loc, *, threshold, k, row_axis, col_axis, q, r,
-    bs, capacity, accumulation,
+    bs, capacity, accumulation, ticker=None,
 ):
     """The one 2-D checkerboard driver both representations run through.
 
@@ -1136,6 +1142,10 @@ def _checkerboard_sweep(
     ``blk`` against the traveling corpus cell in the local dimension slice
     (einsum or gather-dot — the same seam the vertical dispatch uses), and
     ``_accumulate_block_scores`` composes the column-axis accumulation.
+
+    ``ticker`` (a ``distributed.straggler.StepTicker``) plants one host
+    tick per rank per ring step — the dep argument is data computed by the
+    step, so the callback cannot be hoisted out of the loop.
     """
     nb = n_loc // bs
     me_r = lax.axis_index(row_axis)
@@ -1157,6 +1167,9 @@ def _checkerboard_sweep(
 
         ov, ms = lax.scan(body, jnp.int32(0), jnp.arange(nb))
         m_new = jax.tree.map(lambda x: x.reshape(n_loc, *x.shape[2:]), ms)
+        if ticker is not None:
+            rank = me_r * r + lax.axis_index(col_axis)
+            ticker.emit(s, rank, jnp.sum(m_new.counts) + ov)
         return merge_matches(matches, m_new), overflow + ov
 
     def step(s, carry):
@@ -1179,7 +1192,7 @@ def _checkerboard_sweep(
 
 def _apss_2d_local(
     D_loc, *, threshold, k, row_axis, col_axis, q, r, block_rows,
-    capacity, accumulation,
+    capacity, accumulation, ticker=None,
 ):
     n_loc, _ = D_loc.shape
     bs = _block_clamp(block_rows, n_loc)
@@ -1195,6 +1208,7 @@ def _apss_2d_local(
         partials, _to_wire(D_loc), n_loc,
         threshold=threshold, k=k, row_axis=row_axis, col_axis=col_axis,
         q=q, r=r, bs=bs, capacity=capacity, accumulation=accumulation,
+        ticker=ticker,
     )
 
 
@@ -1232,7 +1246,11 @@ def _apss_2d_sparse(
     n_loc = n // q
     bs = _block_clamp(block_rows, n_loc)
 
+    ticker = None
     if telemetry.enabled():
+        from repro.distributed.straggler import StepTicker
+
+        ticker = StepTicker()
         telemetry.record(telemetry.ApssStats(
             variant=f"2d/{accumulation}",
             n=n, m=D.m, devices=q * r, block_rows=bs, sparse=True,
@@ -1245,13 +1263,14 @@ def _apss_2d_sparse(
                 "mesh": {str(row_axis): q, str(col_axis): r},
                 "cap_loc": cap_loc,
             },
+            step_ticker=ticker,
         ))
 
     fn = functools.partial(
         _apss_2d_sparse_local,
         m_loc=m_loc, threshold=threshold, k=k, row_axis=row_axis,
         col_axis=col_axis, q=q, r=r, block_rows=block_rows, capacity=C,
-        accumulation=accumulation,
+        accumulation=accumulation, ticker=ticker,
     )
     # Same VMA caveat as every sparse schedule: no checker rule for the
     # scatter/gather ops inside the sparse tile primitive.
@@ -1280,7 +1299,7 @@ def _apss_2d_sparse(
 
 def _apss_2d_sparse_local(
     idx, val, nnz, *, m_loc, threshold, k, row_axis, col_axis, q, r,
-    block_rows, capacity, accumulation,
+    block_rows, capacity, accumulation, ticker=None,
 ):
     # Shard dims (1, n_loc, cap_loc) / (1, n_loc) → local cell.
     idx, val, nnz = idx[0], val[0], nnz[0]
@@ -1299,6 +1318,7 @@ def _apss_2d_sparse_local(
         partials, (idx, val), n_loc,
         threshold=threshold, k=k, row_axis=row_axis, col_axis=col_axis,
         q=q, r=r, bs=bs, capacity=capacity, accumulation=accumulation,
+        ticker=ticker,
     )
 
 
@@ -1307,25 +1327,33 @@ def _apss_2d_sparse_local(
 # ---------------------------------------------------------------------------
 
 
-def _nested_ring_sweep(mesh, axes, carry0, join):
+def _nested_ring_sweep(mesh, axes, carry0, join, *, ticker=None, rank=None):
     """Shared N-level nested-ring driver (dense blocks or CSR triples).
 
     ``carry0 = (buf, owner, matches)``: ``buf`` is an arbitrary pytree that
     hops with its 1-element i32 ``owner`` id; ``join(buf, owner, matches)``
     scores the local rows against the traveling block. The innermost axis
     rings most often; each outer axis hops once per full inner sweep.
+
+    ``ticker`` (with ``rank``, the caller's flat rank) plants one host tick
+    per rank per compute — ``∏ sizes`` ticks per rank for a full sweep. A
+    traced step counter rides the carry to number them; it is replicated
+    (identical on every rank), so it never perturbs the VMA analysis.
     """
     sizes = [mesh.shape[a] for a in axes]
 
     def compute(carry):
-        buf, own, matches = carry
-        return buf, own, join(buf, own, matches)
+        buf, own, matches, stepno = carry
+        matches = join(buf, own, matches)
+        if ticker is not None:
+            ticker.emit(stepno, rank, jnp.sum(matches.counts))
+        return buf, own, matches, stepno + 1
 
     def hop(carry, axis):
-        buf, own, matches = carry
+        buf, own, matches, stepno = carry
         perm = _ring_perm(mesh.shape[axis])
         pp = functools.partial(lax.ppermute, axis_name=axis, perm=perm)
-        return jax.tree.map(pp, buf), pp(own), matches
+        return jax.tree.map(pp, buf), pp(own), matches, stepno
 
     def sweep(level, carry):
         if level == len(axes):
@@ -1339,7 +1367,7 @@ def _nested_ring_sweep(mesh, axes, carry0, join):
         carry = lax.fori_loop(0, p - 1, step, carry)
         return sweep(level + 1, carry)  # last sub-sweep: no trailing hop
 
-    _, _, matches = sweep(0, carry0)
+    _, _, matches, _ = sweep(0, (*carry0, jnp.int32(0)))
     return matches
 
 
@@ -1385,7 +1413,11 @@ def apss_horizontal_hierarchical(
             "score with the XLA gather-dot primitive"
         )
 
+    ticker = None
     if telemetry.enabled():
+        from repro.distributed.straggler import StepTicker
+
+        ticker = StepTicker()
         n = D.shape[0]
         n_loc = n // ptot
         sparse_in = isinstance(D, SparseCorpus)
@@ -1408,11 +1440,12 @@ def apss_horizontal_hierarchical(
                 else telemetry.dense_join_flops(n_loc, n, D.shape[1])
             ),
             extra={"axes": dict(zip(axes, sizes)), "use_kernel": use_kernel},
+            step_ticker=ticker,
         ))
 
     if isinstance(D, SparseCorpus):
         return _sparse_horizontal_hierarchical(
-            D, threshold, k, mesh, axes, block_rows=block_rows
+            D, threshold, k, mesh, axes, block_rows=block_rows, ticker=ticker
         )
 
     def body(D_loc):
@@ -1431,7 +1464,8 @@ def apss_horizontal_hierarchical(
 
         matches0 = _pvary(_empty_local_matches(n_loc, k), axes)
         return _nested_ring_sweep(
-            mesh, axes, (_to_wire(D_loc), flat[None], matches0), join
+            mesh, axes, (_to_wire(D_loc), flat[None], matches0), join,
+            ticker=ticker, rank=flat,
         )
 
     return shard_map(
@@ -1444,7 +1478,7 @@ def apss_horizontal_hierarchical(
 
 
 def _sparse_horizontal_hierarchical(
-    D: SparseCorpus, threshold, k, mesh, axes, *, block_rows,
+    D: SparseCorpus, threshold, k, mesh, axes, *, block_rows, ticker=None,
 ):
     """Nested pod ring on CSR: the sparse twin of the dense hierarchical.
 
@@ -1475,7 +1509,8 @@ def _sparse_horizontal_hierarchical(
 
         matches0 = _pvary(_empty_local_matches(n_loc, k), axes)
         return _nested_ring_sweep(
-            mesh, axes, ((idx, val, nnz), flat[None], matches0), join
+            mesh, axes, ((idx, val, nnz), flat[None], matches0), join,
+            ticker=ticker, rank=flat,
         )
 
     # Same VMA caveat as every sparse schedule: the scatter/gather ops in

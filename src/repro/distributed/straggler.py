@@ -15,8 +15,12 @@ Mitigations wired into the training loop:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import defaultdict, deque
+
+import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass
@@ -72,3 +76,78 @@ class StepTimer:
             r for r, t in self.rank_ema.items() if t > self.tolerance * median
         ]
         return StragglerReport(dict(self.rank_ema), median, evict, self.tolerance)
+
+
+class StepTicker:
+    """Per-step per-rank host ticks from INSIDE traced ring sweeps.
+
+    The distributed sweeps run their whole ring as one traced ``fori_loop``
+    under ``shard_map`` — no host code runs between steps, so :class:`StepTimer`
+    alone cannot see them. :meth:`emit` plants a ``jax.debug.callback`` in the
+    traced step body; at execution time each rank's callback lands here with
+    ``(step, rank)`` and is stamped with host ``perf_counter``. The ``dep``
+    argument must be a value computed BY the step (e.g. the merged match
+    counts' sum) — the data dependence keeps XLA from hoisting the callback
+    out of the loop.
+
+    Timing semantics: tick arrival approximates step completion on the host
+    timeline. ``step_times()[s]`` is the gap between the latest rank tick of
+    step ``s`` and of step ``s-1`` (step 0 is measured from ticker creation,
+    so on a first call it absorbs compile time — compare later steps, not
+    step 0). :meth:`to_step_timer` folds per-rank deltas into the
+    :class:`StepTimer` ledger so ``report().evict`` can feed the elastic
+    resume-on-smaller-mesh path (``robust.sweep.mesh_after_eviction``).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.ticks: list[tuple[int, int, float]] = []  # (rank, step, t)
+        self._created = time.perf_counter()
+
+    # -- trace-time side ---------------------------------------------------
+
+    def emit(self, step, rank, dep) -> None:
+        """Plant the host tick in traced code (call inside the step body)."""
+        jax.debug.callback(self._tick, step, rank, jnp.asarray(dep))
+
+    def _tick(self, step, rank, dep) -> None:
+        with self._lock:
+            self.ticks.append((int(rank), int(step), time.perf_counter()))
+
+    # -- host side ---------------------------------------------------------
+
+    def _settled(self) -> list[tuple[int, int, float]]:
+        jax.effects_barrier()  # every planted callback has landed
+        with self._lock:
+            return list(self.ticks)
+
+    @property
+    def n_steps(self) -> int:
+        ticks = self._settled()
+        return 1 + max((s for _, s, _ in ticks), default=-1)
+
+    def step_times(self) -> tuple[float, ...]:
+        """One wall-time entry per ring step (slowest rank sets the pace)."""
+        ticks = self._settled()
+        by_step: dict[int, float] = {}
+        for _, s, t in ticks:
+            by_step[s] = max(t, by_step.get(s, -1.0))
+        out, prev = [], self._created
+        for s in sorted(by_step):
+            out.append(by_step[s] - prev)
+            prev = by_step[s]
+        return tuple(out)
+
+    def to_step_timer(self, **timer_kwargs) -> StepTimer:
+        """Fold per-rank step deltas into a :class:`StepTimer` ledger."""
+        timer = StepTimer(**timer_kwargs)
+        per_rank: dict[int, dict[int, float]] = defaultdict(dict)
+        for r, s, t in self._settled():
+            per_rank[r][s] = max(t, per_rank[r].get(s, -1.0))
+        for r, by_s in per_rank.items():
+            steps = sorted(by_s)
+            if len(steps) == 1:
+                timer.record(r, by_s[steps[0]] - self._created)
+            for a, b in zip(steps, steps[1:]):
+                timer.record(r, by_s[b] - by_s[a])
+        return timer

@@ -106,9 +106,28 @@ def run_retrieval(args) -> None:
     # Perturbed corpus rows: realistic near-duplicate, topical traffic.
     qs = list(perturbed_queries(sp, args.requests, seed=1))
 
-    def make_server():
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
+
+    def make_server(chaos: bool = False):
+        # Chaos lane: a fresh seeded FaultPlan per server (plans are
+        # consumable) — injected step delays + transient scoring-tier
+        # errors exercise the shed/degrade/retry machinery under the same
+        # traffic the clean lane measures.
+        plan = None
+        if chaos:
+            from repro.robust import FaultPlan
+
+            steps = max(1, args.requests // args.batch)
+            # Delays hit the serving step loop; transient errors hit the
+            # XLA scoring tier (always present — the kernel tier is
+            # TPU-only) so the retry/degrade machinery actually exercises.
+            plan = FaultPlan.chaos(args.chaos_seed, steps=steps,
+                                   kernel_errors=2, scope="serving",
+                                   error_scope="serving.xla")
         return RetrievalServer(
-            index, threshold=args.threshold, k=args.k, max_batch=args.batch
+            index, threshold=args.threshold, k=args.k, max_batch=args.batch,
+            deadline_s=deadline_s, fault_plan=plan,
+            max_retries=2, backoff_s=0.001,
         )
 
     # Warm up compile caches on a THROWAWAY server (the jitted scoring
@@ -116,20 +135,22 @@ def run_retrieval(args) -> None:
     # fresh one — otherwise the warmup batch sits in the LRU cache and
     # inflates the measured QPS.
     make_server().serve(qs[: args.batch])
-    srv = make_server()
+    srv = make_server(chaos=args.chaos)
     t0 = time.time()
     results = srv.serve(qs)
     dt = time.time() - t0
     n_match = sum(r.count for r in results)
+    served = [r for r in results if r.status == "ok"]
     print(
         f"[serve] corpus n={sp.n} m={sp.m} (gen {t_gen:.1f}s) "
         f"index build {t_build:.2f}s"
+        + (f" chaos seed={args.chaos_seed}" if args.chaos else "")
     )
     print(
         f"[serve] {len(results)} queries in {dt:.3f}s "
         f"({len(results)/dt:.1f} QPS, batch {args.batch}, "
         f"{1e3*dt/len(results):.2f} ms/query), {n_match} matches, "
-        f"stats={srv.stats}"
+        f"{len(served)} exact, stats={srv.stats}"
     )
 
 
@@ -201,6 +222,14 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--autotune", action="store_true",
                     help="auto mode: microbenchmark the top-3 plans")
+    ap.add_argument("--chaos", action="store_true",
+                    help="retrieval mode: inject seeded faults (step delays"
+                         " + transient scoring errors) and report the"
+                         " shed/degraded/retries counters")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="retrieval mode: per-request deadline; late"
+                         " requests are shed, not served")
     args = ap.parse_args()
 
     if args.mode == "retrieval":

@@ -37,6 +37,7 @@ by the compressed accumulations — different objects for different jobs.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -81,6 +82,13 @@ class ApssStats:
     total_tiles: Optional[int] = None
     tile_counts: Optional[tuple[int, ...]] = None
     extra: dict = dataclasses.field(default_factory=dict)
+    # Per-step wall-time collector (distributed.straggler.StepTicker) wired
+    # by the sweep drivers: records are created at trace time, but the
+    # ticker's host callbacks fire during execution, so read `step_times`
+    # only after the sweep's outputs are ready.
+    step_ticker: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     @property
     def wire_bytes(self) -> int:
@@ -118,6 +126,15 @@ class ApssStats:
             return 1.0
         return max(self.tile_counts) / mean
 
+    @property
+    def step_times(self) -> Optional[tuple[float, ...]]:
+        """Measured per-ring-step wall times (max over ranks), one entry per
+        step, or None for variants without a wired ticker. Blocks on the
+        runtime's effects barrier so every host tick has landed."""
+        if self.step_ticker is None:
+            return None
+        return self.step_ticker.step_times()
+
 
 class CommLog:
     """Context manager collecting :class:`ApssStats` from instrumented calls.
@@ -133,6 +150,10 @@ class CommLog:
 
     def __init__(self) -> None:
         self.records: list[ApssStats] = []
+        # Robustness counters (serving.shed / serving.degraded /
+        # serving.retries / sweep.resumed_steps ...) incremented through
+        # :func:`incr` by the serving ladder and the resumable sweeps.
+        self.counters: collections.Counter = collections.Counter()
 
     def __enter__(self) -> "CommLog":
         _STACK.append(self)
@@ -171,6 +192,20 @@ def record(stats: ApssStats) -> None:
     """Append ``stats`` to every active log (no-op when none is active)."""
     for log in _STACK:
         log.records.append(stats)
+
+
+def incr(name: str, n: int = 1) -> None:
+    """Increment counter ``name`` in every active log (no-op when none).
+
+    The robustness layer's event counters flow through here — the serving
+    degradation ladder (``serving.shed`` / ``serving.degraded`` /
+    ``serving.retries`` / ``serving.stale``) and the resumable sweeps
+    (``sweep.resumed_steps`` / ``sweep.checkpoints``). Host-side events
+    only: unlike :func:`record`, these fire at execution time, never
+    inside traced code.
+    """
+    for log in _STACK:
+        log.counters[name] += n
 
 
 # ---------------------------------------------------------------------------

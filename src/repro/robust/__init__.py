@@ -1,0 +1,10 @@
+from repro.robust.faults import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    SweepKilled,
+)
+from repro.robust.sweep import (  # noqa: F401
+    ResumableSweep,
+    mesh_after_eviction,
+)

@@ -10,18 +10,41 @@ the classic head-of-zipf serving win — without touching the device.
 
 For mesh-sharded indexes the underlying ``query_topk`` runs the per-shard
 scoring path and merges partial top-k host-side; the server is agnostic.
+
+Degraded-mode contract (DESIGN.md §8): under overload or scoring failure
+the server prefers a *worse answer now* over a perfect answer too late —
+
+- **admission control**: past ``max_pending`` queued requests, new submits
+  are shed immediately (``status="shed"``, empty result);
+- **deadlines**: requests whose deadline lapses before their batch is
+  scored are shed at the step boundary; in-budget requests in the same
+  batch still get exact results;
+- **degradation ladder**: each scoring tier (Pallas kernel → XLA scan) is
+  retried ``max_retries`` times with exponential backoff, then the server
+  degrades to the next tier; when every tier fails, a stale LRU entry (one
+  past ``ttl_s``, ineligible for fresh hits) still answers
+  (``status="stale"``), and only cache misses fail.
+
+Every event increments a counter here AND in the active telemetry log
+(``planner.telemetry.incr``: ``serving.shed`` / ``serving.degraded`` /
+``serving.retries`` / ``serving.stale``). Adversarial input is rejected at
+``submit`` — non-numeric dtypes and non-finite (NaN/inf) queries raise
+``ValueError``; all-zero queries under ``normalize=True`` are served (they
+normalize to zero, match nothing, and return an empty result).
 """
 
 from __future__ import annotations
 
 import collections
 import hashlib
+import time
 from typing import NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.apss import normalize_rows
+from repro.planner import telemetry
 from repro.serving.index import APSSIndex
 from repro.serving.query import query_topk
 
@@ -33,12 +56,17 @@ class RetrievalResult(NamedTuple):
     indices: np.ndarray  # (k,) i32 corpus row ids, -1 padded
     count: int           # exact #corpus rows ≥ threshold (may exceed k)
     cached: bool         # served from the LRU cache
+    status: str = "ok"   # "ok" | "shed" | "stale" | "failed"
 
 
 class ServerStats(NamedTuple):
     requests: int
     steps: int
     cache_hits: int
+    shed: int = 0        # admission-control + deadline rejections
+    degraded: int = 0    # scoring-tier downgrades (kernel → XLA → stale)
+    retries: int = 0     # same-tier retry attempts
+    stale: int = 0       # answers served from an expired cache entry
 
 
 class RetrievalServer:
@@ -54,7 +82,21 @@ class RetrievalServer:
         clients need not normalize consistently).
       cache_size: LRU entries; 0 disables the cache.
       use_kernel: route tile scoring through the rectangular Pallas
-        kernels (single-host indexes; TPU).
+        kernels (single-host indexes; TPU); on failure the server degrades
+        to the XLA scan tier instead of erroring.
+      deadline_s: default per-request deadline (None = no deadline);
+        requests not scored within it are shed at the next step boundary.
+      max_pending: admission budget — submits past this queue depth are
+        shed immediately (None = unbounded).
+      max_retries / backoff_s: per-tier retry policy around the jitted
+        scoring call (exponential backoff starting at ``backoff_s``).
+      ttl_s: cache freshness horizon. Entries older than this no longer
+        satisfy submit-time hits but remain eligible for the stale-answer
+        tier when every scoring tier is down (None = never stale).
+      fault_plan: a ``robust.faults.FaultPlan`` for chaos testing — armed
+        ``delay`` faults (scope ``"serving"``) stall the step like a slow
+        shard; ``error`` faults (scope ``"serving.kernel"`` /
+        ``"serving.xla"``) fail scoring tiers.
     """
 
     def __init__(
@@ -68,6 +110,12 @@ class RetrievalServer:
         cache_size: int = 256,
         use_kernel: bool = False,
         block_q: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+        max_pending: Optional[int] = None,
+        max_retries: int = 1,
+        backoff_s: float = 0.01,
+        ttl_s: Optional[float] = None,
+        fault_plan=None,
     ):
         self.index = index
         self.threshold = float(threshold)
@@ -79,28 +127,79 @@ class RetrievalServer:
         # sees a single (block_q, m) shape for the server's lifetime.
         self.block_q = int(block_q or max(8, self.max_batch))
         self.cache_size = int(cache_size)
-        self._cache: collections.OrderedDict[str, RetrievalResult] = (
-            collections.OrderedDict()
-        )
-        self._pending: collections.deque[tuple[int, np.ndarray, str]] = (
-            collections.deque()
-        )
+        self.deadline_s = deadline_s
+        self.max_pending = max_pending
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.ttl_s = ttl_s
+        self.fault_plan = fault_plan
+        self._cache: collections.OrderedDict[
+            str, tuple[RetrievalResult, float]
+        ] = collections.OrderedDict()
+        # pending entries: (rid, query, cache_key, absolute deadline | inf)
+        self._pending: collections.deque[
+            tuple[int, np.ndarray, str, float]
+        ] = collections.deque()
         self._results: dict[int, RetrievalResult] = {}
         self._next_id = 0
         self._requests = 0
         self._steps = 0
         self._cache_hits = 0
+        self._shed = 0
+        self._degraded = 0
+        self._retries = 0
+        self._stale = 0
+
+    # -- input contract -----------------------------------------------------
+
+    def _coerce_query(self, query) -> np.ndarray:
+        """Validate + coerce one query to finite f32 ``(m,)``.
+
+        The adversarial-input contract (pinned by
+        ``tests/test_robust_serving.py``): non-numeric dtypes and
+        non-finite values are *rejected* (a NaN poisons every score it
+        touches and -inf sorts unpredictably through top-k — garbage in a
+        result no client can detect); numeric dtypes are cast; all-zero
+        vectors are *accepted* (``normalize_rows`` keeps them zero — they
+        simply match nothing).
+        """
+        q = np.asarray(query)
+        if q.dtype.kind not in "fiub":
+            raise ValueError(
+                f"query dtype {q.dtype} is not numeric "
+                "(float/int/bool accepted)"
+            )
+        q = np.asarray(q, np.float32).reshape(-1)
+        if q.shape[0] != self.index.m:
+            raise ValueError(f"query dim {q.shape[0]} != index m {self.index.m}")
+        if not np.all(np.isfinite(q)):
+            raise ValueError("query contains non-finite values (NaN/inf)")
+        return q
+
+    def _empty_result(self, status: str) -> RetrievalResult:
+        v = np.full((self.k,), -np.inf, np.float32)
+        i = np.full((self.k,), -1, np.int32)
+        v.setflags(write=False)
+        i.setflags(write=False)
+        return RetrievalResult(
+            values=v, indices=i, count=0, cached=False, status=status
+        )
+
+    def _shed_request(self, rid: int) -> None:
+        self._shed += 1
+        telemetry.incr("serving.shed")
+        self._results[rid] = self._empty_result("shed")
 
     # -- request lifecycle --------------------------------------------------
 
-    def submit(self, query) -> int:
+    def submit(self, query, *, deadline_s: Optional[float] = None) -> int:
         """Enqueue one query vector ``(m,)``; returns a request id.
 
         Cache hits latch their result immediately and never join a batch.
+        Submits past the admission budget latch a ``status="shed"`` result
+        instead of queueing (overload must fail fast, not pile up).
         """
-        q = np.asarray(query, np.float32).reshape(-1)
-        if q.shape[0] != self.index.m:
-            raise ValueError(f"query dim {q.shape[0]} != index m {self.index.m}")
+        q = self._coerce_query(query)
         rid = self._next_id
         self._next_id += 1
         self._requests += 1
@@ -109,35 +208,110 @@ class RetrievalServer:
         if hit is not None:
             self._cache_hits += 1
             self._results[rid] = hit._replace(cached=True)
-        else:
-            self._pending.append((rid, q, key))
+            return rid
+        if self.max_pending is not None and len(self._pending) >= self.max_pending:
+            self._shed_request(rid)
+            return rid
+        budget = deadline_s if deadline_s is not None else self.deadline_s
+        deadline = time.monotonic() + budget if budget is not None else np.inf
+        self._pending.append((rid, q, key, deadline))
         return rid
+
+    # -- tiered scoring ------------------------------------------------------
+
+    def _tiers(self) -> list[tuple[str, bool]]:
+        tiers = [("kernel", True)] if self.use_kernel else []
+        tiers.append(("xla", False))
+        return tiers
+
+    def _score_batch(self, Qj):
+        """Run the degradation ladder; returns ``(matches | None, tier)``.
+
+        Each tier gets ``1 + max_retries`` attempts with exponential
+        backoff; a tier that stays down degrades to the next. ``None``
+        means every tier failed — the caller falls to stale answers.
+        """
+        tiers = self._tiers()
+        for nth, (tier, use_k) in enumerate(tiers):
+            delay = self.backoff_s
+            for attempt in range(1 + self.max_retries):
+                try:
+                    if self.fault_plan is not None:
+                        self.fault_plan.fail_point(f"serving.{tier}")
+                    m = query_topk(
+                        self.index, Qj, self.threshold, self.k,
+                        block_q=self.block_q, use_kernel=use_k,
+                    )
+                    if nth > 0:
+                        self._degraded += 1
+                        telemetry.incr("serving.degraded")
+                    return m, tier
+                except Exception:
+                    if attempt < self.max_retries:
+                        self._retries += 1
+                        telemetry.incr("serving.retries")
+                        time.sleep(delay)
+                        delay *= 2
+        self._degraded += 1
+        telemetry.incr("serving.degraded")
+        return None, "stale"
 
     def step(self) -> int:
         """Serve up to ``max_batch`` pending requests with ONE jit'd call.
 
-        Returns the number of requests served this step (0 = idle).
+        Returns the number of requests finished this step (scored + shed;
+        0 = idle). Past-deadline requests are shed *before* the batch is
+        assembled, so a slow previous step never wastes scoring work on
+        answers nobody is waiting for.
         """
         if not self._pending:
             return 0
+        if self.fault_plan is not None:
+            # Chaos seam: an armed delay here models a slow shard/step.
+            self.fault_plan.delay("serving", step=self._steps)
+        now = time.monotonic()
+        shed_count = 0
+        keep: collections.deque = collections.deque()
+        while self._pending:
+            rid, q, key, deadline = self._pending.popleft()
+            if deadline < now:
+                self._shed_request(rid)
+                shed_count += 1
+            else:
+                keep.append((rid, q, key, deadline))
+        self._pending = keep
+        if not self._pending:
+            return shed_count
         batch = [
             self._pending.popleft()
             for _ in range(min(self.max_batch, len(self._pending)))
         ]
         Q = np.zeros((self.max_batch, self.index.m), np.float32)
-        for slot, (_, q, _) in enumerate(batch):
+        for slot, (_, q, _, _) in enumerate(batch):
             Q[slot] = q
         Qj = jnp.asarray(Q)
         if self.normalize:
             Qj = normalize_rows(Qj)
-        m = query_topk(
-            self.index, Qj, self.threshold, self.k,
-            block_q=self.block_q, use_kernel=self.use_kernel,
-        )
+        m, tier = self._score_batch(Qj)
+        self._steps += 1
+        if m is None:
+            # Every scoring tier is down: stale cache answers beat no
+            # answers; true misses fail explicitly.
+            for rid, _, key, _ in batch:
+                stale = self._cache_get(key, stale_ok=True)
+                if stale is not None:
+                    self._stale += 1
+                    telemetry.incr("serving.stale")
+                    self._results[rid] = stale._replace(
+                        cached=True, status="stale"
+                    )
+                else:
+                    self._results[rid] = self._empty_result("failed")
+            return len(batch) + shed_count
         values = np.asarray(m.values)
         indices = np.asarray(m.indices)
         counts = np.asarray(m.counts)
-        for slot, (rid, _, key) in enumerate(batch):
+        for slot, (rid, _, key, _) in enumerate(batch):
             # Per-request copies, frozen: the cache and every client hold
             # the same arrays, so in-place mutation by one caller would
             # otherwise corrupt later cache hits — make it raise instead.
@@ -150,8 +324,7 @@ class RetrievalServer:
             )
             self._results[rid] = res
             self._cache_put(key, res)
-        self._steps += 1
-        return len(batch)
+        return len(batch) + shed_count
 
     def result(self, rid: int) -> RetrievalResult:
         """Pop a finished request's result (steps until it is ready)."""
@@ -175,18 +348,30 @@ class RetrievalServer:
         h.update(np.int32(self.k).tobytes())
         return h.hexdigest()
 
-    def _cache_get(self, key: str) -> Optional[RetrievalResult]:
+    def _cache_get(
+        self, key: str, *, stale_ok: bool = False
+    ) -> Optional[RetrievalResult]:
+        """Fresh hits only by default; ``stale_ok`` ignores ``ttl_s`` —
+        the last-resort answer tier when every scoring tier is down."""
         if self.cache_size <= 0:
             return None
         hit = self._cache.get(key)
-        if hit is not None:
-            self._cache.move_to_end(key)
-        return hit
+        if hit is None:
+            return None
+        res, born = hit
+        if (
+            not stale_ok
+            and self.ttl_s is not None
+            and time.monotonic() - born > self.ttl_s
+        ):
+            return None
+        self._cache.move_to_end(key)
+        return res
 
     def _cache_put(self, key: str, res: RetrievalResult) -> None:
         if self.cache_size <= 0:
             return
-        self._cache[key] = res
+        self._cache[key] = (res, time.monotonic())
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
@@ -197,4 +382,8 @@ class RetrievalServer:
             requests=self._requests,
             steps=self._steps,
             cache_hits=self._cache_hits,
+            shed=self._shed,
+            degraded=self._degraded,
+            retries=self._retries,
+            stale=self._stale,
         )

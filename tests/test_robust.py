@@ -1,0 +1,317 @@
+"""Fault-injection suite (ISSUE 6): resumable sweeps + checkpoint integrity.
+
+Recovery is proven for the three fault classes the acceptance criteria
+name — kill-mid-sweep (resume on the same AND a reshaped mesh, bit-identical
+to an uninterrupted run), checkpoint corruption (detected at load, restore
+falls back one kept step), and straggler eviction (StepTimer report → a
+smaller mesh → resumed sweep still exact). Every fault comes from a seeded
+``FaultPlan`` so each failure is deterministic and each test asserts the
+fault actually fired.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.checkpoint import (
+    CheckpointCorruptionError,
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.core.apss import apss_reference
+from repro.distributed.straggler import StepTimer
+from repro.planner import telemetry
+from repro.robust import (
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    ResumableSweep,
+    SweepKilled,
+    mesh_after_eviction,
+)
+
+T, K, BN = 0.35, 16, 32
+
+
+def _matches_equal(a, b):
+    return (
+        np.array_equal(np.asarray(a.values), np.asarray(b.values))
+        and np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+        and np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    )
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism + semantics
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_plan_is_deterministic():
+    a = FaultPlan.chaos(7, steps=16, kill=True)
+    b = FaultPlan.chaos(7, steps=16, kill=True)
+    assert a.faults == b.faults
+    c = FaultPlan.chaos(8, steps=16, kill=True)
+    assert a.faults != c.faults
+
+
+def test_fault_times_are_consumed():
+    plan = FaultPlan([Fault("error", scope="s", times=2)])
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            plan.fail_point("s")
+    plan.fail_point("s")  # exhausted: no-op
+    assert plan.fired["error:s"] == 2
+    assert not plan.armed("error", "s")
+
+
+def test_unmatched_hooks_are_noops():
+    plan = FaultPlan([Fault("kill", step=3)])
+    plan.kill_point(2)
+    plan.fail_point("anything")
+    assert plan.delay("sweep", step=0) == 0.0
+    x = np.ones(4)
+    assert plan.corrupt_array(x, step=0) is x
+    assert plan.total_fired == 0
+
+
+def test_corrupt_array_is_seeded():
+    mk = lambda: FaultPlan([Fault("corrupt", scope="sweep.caravan")], seed=5)
+    x = np.linspace(0, 1, 32, dtype=np.float32)
+    a = mk().corrupt_array(x.copy(), step=3)
+    b = mk().corrupt_array(x.copy(), step=3)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, x)
+
+
+# ---------------------------------------------------------------------------
+# Resumable sweep: exactness
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_matches_oracle(corpus, tmp_path):
+    ref = apss_reference(corpus, T, K)
+    got = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=str(tmp_path)
+    ).run()
+    assert _matches_equal(got, ref)
+
+
+def test_sweep_mesh_bit_identical_to_single_device(corpus, tmp_path, mesh8):
+    """The mesh only changes placement — same bits as the 1-device run."""
+    solo = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=str(tmp_path / "s")
+    ).run()
+    dist = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN,
+        directory=str(tmp_path / "d"), mesh=mesh8,
+    ).run()
+    assert _matches_equal(solo, dist)
+
+
+def test_sweep_meta_mismatch_refuses_resume(corpus, tmp_path):
+    ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=str(tmp_path)
+    ).run()
+    with pytest.raises(ValueError, match="meta mismatch"):
+        ResumableSweep(
+            corpus, threshold=0.5, k=K, block_rows=BN,
+            directory=str(tmp_path),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fault type 1: kill mid-sweep → resume (same mesh, reshaped mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_kill_then_resume_same_mesh(corpus, tmp_path):
+    ref = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=str(tmp_path / "r")
+    ).run()
+    plan = FaultPlan([Fault("kill", step=2)])
+    d = str(tmp_path / "k")
+    with pytest.raises(SweepKilled):
+        ResumableSweep(
+            corpus, threshold=T, k=K, block_rows=BN, directory=d,
+            fault_plan=plan,
+        ).run()
+    assert plan.fired["kill:sweep"] == 1
+    with telemetry.CommLog() as log:
+        got = ResumableSweep(
+            corpus, threshold=T, k=K, block_rows=BN, directory=d
+        ).run()
+    assert _matches_equal(got, ref)
+    # the fault suite's headline counter: steps recovered from disk
+    assert log.counters["sweep.resumed_steps"] == 2
+    assert log.counters["sweep.checkpoints"] > 0
+
+
+def test_kill_then_resume_reshaped_mesh(corpus, tmp_path, mesh8):
+    """Kill on 8 devices, resume on 4 — Matches identical to uninterrupted."""
+    ref = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=str(tmp_path / "r")
+    ).run()
+    d = str(tmp_path / "k")
+    killer = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=d, mesh=mesh8,
+        fault_plan=FaultPlan([Fault("kill", step=3)]),
+    )
+    with pytest.raises(SweepKilled):
+        killer.run()
+    smaller = Mesh(np.array(jax.devices()[:4]), ("data",))
+    resumed = killer.resume_on(smaller)
+    got = resumed.run()
+    assert resumed.resumed_from == 3
+    assert _matches_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Fault type 2: corruption — traveling packet + checkpoint leaf
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_caravan_changes_result(corpus, tmp_path):
+    """The harness really damages in-flight partials: a corrupted caravan
+    survives merging and the final Matches differ from the oracle (at-rest
+    checksums cannot see in-flight damage — that is exactness-check
+    territory, pinned here)."""
+    ref = apss_reference(corpus, T, K)
+    plan = FaultPlan([Fault("corrupt", scope="sweep.caravan", step=1)])
+    got = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN,
+        directory=str(tmp_path), fault_plan=plan,
+    ).run()
+    assert plan.fired["corrupt:sweep.caravan"] == 1
+    assert not _matches_equal(got, ref)
+
+
+def test_checksum_detects_bitflip(tmp_path):
+    state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+    final = save_checkpoint(state, str(tmp_path), 1)
+    leaf = os.path.join(final, "w.npy")
+    FaultPlan(seed=3).corrupt_file(leaf)
+    with pytest.raises(CheckpointCorruptionError, match="checksum mismatch"):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_restore_falls_back_past_corrupt_step(corpus, tmp_path):
+    """Newest checkpoint corrupt → restore(fallback=True) walks back one
+    kept step and the resumed sweep still matches the oracle exactly."""
+    ref = apss_reference(corpus, T, K)
+    d = str(tmp_path)
+    killer = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=d,
+        fault_plan=FaultPlan([Fault("kill", step=3)]),
+    )
+    with pytest.raises(SweepKilled):
+        killer.run()
+    latest = killer.manager.latest_step()
+    assert latest == 3
+    step_dir = os.path.join(d, f"step_{latest:010d}")
+    leaf = [f for f in os.listdir(step_dir) if f.endswith(".npy")][0]
+    FaultPlan(seed=1).corrupt_file(os.path.join(step_dir, leaf))
+    with pytest.raises(CheckpointCorruptionError):
+        killer.manager.restore(step=latest)
+    with pytest.warns(UserWarning, match="falling back"):
+        resumed = ResumableSweep(
+            corpus, threshold=T, k=K, block_rows=BN, directory=d
+        )
+        got = resumed.run()
+    assert resumed.resumed_from == 2  # one checkpoint window lost, not the job
+    assert _matches_equal(got, ref)
+
+
+def test_restore_raises_when_all_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save({"x": np.ones(4, np.float32)}, 1)
+    for s in mgr.all_steps():
+        step_dir = os.path.join(str(tmp_path), f"step_{s:010d}")
+        leaf = [f for f in os.listdir(step_dir) if f.endswith(".npy")][0]
+        FaultPlan(seed=s).corrupt_file(os.path.join(step_dir, leaf))
+    with pytest.warns(UserWarning):
+        with pytest.raises(CheckpointCorruptionError, match="every kept"):
+            mgr.restore(fallback=True)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: async checkpoint writes must never fail silently
+# ---------------------------------------------------------------------------
+
+
+def test_async_write_error_surfaces_on_wait(tmp_path, monkeypatch):
+    from repro.checkpoint import checkpointer
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+
+    def boom(state, directory, step):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(checkpointer, "save_checkpoint", boom)
+    mgr.save({"x": np.ones(4, np.float32)}, 1, blocking=False)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    mgr.wait()  # error is raised once, then cleared
+
+
+def test_async_write_error_surfaces_on_next_save(tmp_path, monkeypatch):
+    from repro.checkpoint import checkpointer
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    real = checkpointer.save_checkpoint
+
+    def boom(state, directory, step):
+        raise OSError("quota exceeded")
+
+    monkeypatch.setattr(checkpointer, "save_checkpoint", boom)
+    mgr.save({"x": np.ones(4, np.float32)}, 1, blocking=False)
+    monkeypatch.setattr(checkpointer, "save_checkpoint", real)
+    with pytest.raises(OSError, match="quota exceeded"):
+        mgr.save({"x": np.ones(4, np.float32)}, 2)
+
+
+# ---------------------------------------------------------------------------
+# Fault type 3 (sweep side): straggler eviction feeds a smaller mesh
+# ---------------------------------------------------------------------------
+
+
+def test_evict_report_shrinks_mesh_and_resume_is_exact(corpus, tmp_path, mesh8):
+    ref = apss_reference(corpus, T, K)
+    d = str(tmp_path)
+    killer = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=d, mesh=mesh8,
+        fault_plan=FaultPlan([Fault("kill", step=2)]),
+    )
+    with pytest.raises(SweepKilled):
+        killer.run()
+    # Synthetic straggler ledger: rank 5 is 10x the median step time.
+    timer = StepTimer(tolerance=1.5)
+    for rank in range(8):
+        for _ in range(4):
+            timer.record(rank, 1.0 if rank == 5 else 0.1)
+    report = timer.report()
+    assert report.evict == [5]
+    smaller = mesh_after_eviction(mesh8, report)
+    assert smaller.devices.size == 7
+    got = killer.resume_on(smaller).run()
+    assert _matches_equal(got, ref)
+
+
+def test_mesh_after_eviction_noop_without_stragglers(mesh8):
+    timer = StepTimer()
+    for rank in range(8):
+        timer.record(rank, 0.1)
+    assert mesh_after_eviction(mesh8, timer.report()) is mesh8
+
+
+def test_sweep_records_step_times(corpus, tmp_path):
+    timer = StepTimer()
+    sweep = ResumableSweep(
+        corpus, threshold=T, k=K, block_rows=BN, directory=str(tmp_path),
+        timer=timer,
+    )
+    sweep.run()
+    assert len(timer.history[0]) == sweep.B  # one wall time per ring step

@@ -15,6 +15,7 @@ import pytest
 
 from repro.core.apss import apss_blocked, normalize_rows
 from repro.core.distributed import (
+    apss_2d,
     apss_horizontal,
     apss_horizontal_hierarchical,
 )
@@ -221,3 +222,65 @@ def test_vertical_compressed_vs_allreduce_volume(mesh8_model):
         )
     allred, comp = log.records
     assert comp.wire_bytes < allred.wire_bytes
+
+
+def test_2d_step_times_one_entry_per_ring_step(mesh4x2):
+    """ISSUE 6 satellite: the checkerboard sweep's StepTicker lands one
+    per-step wall time in the telemetry record — q entries for a q-step
+    row-axis ring — and every (row, col) rank ticks every step."""
+    import jax
+
+    D = jnp.asarray(_dense(128, 96, 0.3, seed=11))
+    q = mesh4x2.shape["data"]
+    with CommLog() as log:
+        m = apss_2d(D, T, K, mesh4x2, block_rows=16)
+        jax.block_until_ready(m.values)
+    rec = log.last
+    times = rec.step_times
+    assert times is not None and len(times) == q
+    assert all(t > 0 for t in times[1:])  # step 0 absorbs compile time
+    ticker = rec.step_ticker
+    assert ticker.n_steps == q
+    ranks = {r for r, _, _ in ticker.ticks}
+    assert ranks == set(range(8))
+    # the ledger bridge: per-rank deltas feed StragglerReport
+    report = ticker.to_step_timer().report()
+    assert set(report.rank_ema) == set(range(8))
+
+
+def test_hierarchical_step_times_count_all_computes():
+    """Nested (2, 4) ring: ∏sizes = 8 computes per rank, numbered by the
+    traced step counter riding the carry."""
+    import jax
+
+    from repro.compat import make_mesh
+
+    D = jnp.asarray(_dense(128, 96, 0.3, seed=12))
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    with CommLog() as log:
+        m = apss_horizontal_hierarchical(
+            D, T, K, mesh, ("pod", "data"), block_rows=16
+        )
+        jax.block_until_ready(m.values)
+    times = log.last.step_times
+    assert times is not None and len(times) == 8
+
+
+def test_step_times_none_without_ticker():
+    """Variants that don't wire a ticker report None, not garbage."""
+    D = jnp.asarray(_dense(64, 96, 0.3, seed=13))
+    with CommLog() as log:
+        apss_blocked(D, T, K, block_rows=32)
+    assert log.last.step_times is None
+
+
+def test_counter_seam_scopes_to_active_logs():
+    from repro.planner import telemetry as tm
+
+    tm.incr("x.y")  # no active log: no-op, no error
+    with CommLog() as outer:
+        with CommLog() as inner:
+            tm.incr("x.y", 2)
+        tm.incr("x.y")
+    assert inner.counters["x.y"] == 2
+    assert outer.counters["x.y"] == 3
