@@ -1,0 +1,141 @@
+"""Mutable-index bench: append+delta-join cost vs full rebuild.
+
+The live-corpus acceptance bar (ISSUE 7): per-append cost must scale with
+the DELTA, not the corpus — appending ``delta`` rows to an ``n``-row
+``MutableAPSSIndex`` (WAL-less) is timed against rebuilding the whole
+``n + delta`` index from scratch, across delta sizes ``n/64 → n/4``. The
+CI gate (``check_schema.check_mutable``) requires ≥ 5× speedup at
+delta ≤ n/16.
+
+Each delta size gets a fresh base index and a warmup append on a scratch
+twin so trace time is excluded from both sides (the rebuild side reuses
+the same compiled delta-join shapes). Run standalone to merge a
+``mutable`` section into BENCH_apss.json:
+
+    PYTHONPATH=src python -m benchmarks.bench_mutable --json [PATH] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.serving import MutableAPSSIndex
+
+
+def _timed(fn, *, iters: int) -> float:
+    """Median wall seconds. No jit-level warmup here — each call mutates
+    state, so callers pass pre-warmed (already-traced) shapes instead."""
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure(
+    n: int,
+    m: int,
+    *,
+    deltas: list[int],
+    threshold: float = 0.2,
+    k: int = 16,
+    block: int = 64,
+    iters: int = 3,
+    seed: int = 0,
+) -> dict:
+    rng = np.random.default_rng(seed)
+    D = rng.normal(size=(n, m)).astype(np.float32)
+    out = {
+        "n": n, "m": m, "threshold": threshold, "k": k, "block": block,
+        "deltas": [],
+    }
+
+    def fresh_base():
+        return MutableAPSSIndex(D, threshold=threshold, k=k, block_rows=block)
+
+    for delta in deltas:
+        new = rng.normal(size=(delta, m)).astype(np.float32)
+        full = np.concatenate([D, new])
+
+        # warm every shape on scratch indexes so neither side pays trace
+        # time: base-build + append, and the full-size rebuild
+        fresh_base().append(new)
+        MutableAPSSIndex(full, threshold=threshold, k=k, block_rows=block)
+
+        # time appends against per-iteration fresh bases (append mutates)
+        bases = [fresh_base() for _ in range(iters)]
+        times = []
+        for b in bases:
+            t0 = time.perf_counter()
+            b.append(new)
+            times.append(time.perf_counter() - t0)
+        append_s = float(np.median(times))
+
+        rebuild_s = _timed(
+            lambda: MutableAPSSIndex(
+                full, threshold=threshold, k=k, block_rows=block
+            ),
+            iters=iters,
+        )
+        out["deltas"].append({
+            "delta": delta,
+            "delta_fraction": delta / n,
+            "append_s": append_s,
+            "rebuild_s": rebuild_s,
+            "speedup": rebuild_s / append_s,
+        })
+    return out
+
+
+def merge_into(path: str, r: dict) -> None:
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["mutable"] = r
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_apss.json", default=None)
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--threshold", type=float, default=0.2)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: n=1024, m=128, 2 iters")
+    args = ap.parse_args()
+    n, m, iters = args.n, args.m, args.iters
+    block = args.block
+    if args.smoke:
+        n, m, iters, block = 1024, 128, 2, 64
+    deltas = [max(8, n // 64), n // 16, n // 4]
+    r = measure(
+        n, m, deltas=deltas, threshold=args.threshold, k=args.k,
+        block=block, iters=iters,
+    )
+    for e in r["deltas"]:
+        print(
+            f"delta {e['delta']:>5} (n/{round(1/e['delta_fraction'])}): "
+            f"append+join {e['append_s']*1e3:8.1f} ms  "
+            f"rebuild {e['rebuild_s']*1e3:8.1f} ms  -> "
+            f"{e['speedup']:.1f}x"
+        )
+    if args.json:
+        merge_into(args.json, r)
+        print(f"-> merged 'mutable' into {args.json}")
+
+
+if __name__ == "__main__":
+    main()

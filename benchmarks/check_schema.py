@@ -138,12 +138,46 @@ def check_planner(doc: dict) -> None:
         )
 
 
+def check_mutable(doc: dict) -> None:
+    """The live-corpus lane (ISSUE 7): per-append cost must scale with the
+    delta, not the corpus — gated as append+delta-join ≥ 5× faster than a
+    full rebuild at some delta ≤ 1/16 of the corpus, with every measured
+    delta beating rebuild outright."""
+    _require_keys(doc, {"mutable"}, "$")
+    mu = doc["mutable"]
+    _require_keys(
+        mu, {"n", "m", "threshold", "k", "block", "deltas"}, "$.mutable"
+    )
+    _require(mu["deltas"], "$.mutable.deltas", "no measured deltas")
+    small = []
+    for i, e in enumerate(mu["deltas"]):
+        where = f"$.mutable.deltas[{i}]"
+        _require_keys(
+            e,
+            {"delta", "delta_fraction", "append_s", "rebuild_s", "speedup"},
+            where,
+        )
+        _require(e["append_s"] > 0 and e["rebuild_s"] > 0, where,
+                 "timings must be positive")
+        if e["delta_fraction"] <= 1 / 16:
+            small.append(e)
+    _require(small, "$.mutable.deltas", "no delta <= n/16 measured")
+    best = max(e["speedup"] for e in small)
+    _require(
+        best >= 5.0,
+        "$.mutable.deltas",
+        f"append+delta-join only {best:.1f}x faster than rebuild at "
+        "delta <= n/16 (acceptance bar: >= 5x)",
+    )
+
+
 def check(doc: dict) -> None:
     """Validate one BENCH artifact; raises :class:`SchemaError` on the first
     violation."""
     check_sparse_sweep(doc)
     check_serving(doc)
     check_planner(doc)
+    check_mutable(doc)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -156,7 +190,10 @@ def main(argv: list[str] | None = None) -> int:
     except SchemaError as e:
         print(f"BENCH schema FAIL ({path}): {e}", file=sys.stderr)
         return 1
-    print(f"BENCH schema OK ({path}): sweep + serving + planner (incl. 2-D lane)")
+    print(
+        f"BENCH schema OK ({path}): sweep + serving + planner "
+        "(incl. 2-D lane) + mutable"
+    )
     return 0
 
 

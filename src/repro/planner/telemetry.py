@@ -200,9 +200,12 @@ def incr(name: str, n: int = 1) -> None:
     The robustness layer's event counters flow through here — the serving
     degradation ladder (``serving.shed`` / ``serving.degraded`` /
     ``serving.retries`` / ``serving.stale``) and the resumable sweeps
-    (``sweep.resumed_steps`` / ``sweep.checkpoints``). Host-side events
-    only: unlike :func:`record`, these fire at execution time, never
-    inside traced code.
+    (``sweep.resumed_steps`` / ``sweep.checkpoints``), and the mutable
+    index (``serving.appends`` / ``serving.deletes`` /
+    ``serving.compactions``, plus recovery events ``mutable.replayed_ops``
+    / ``mutable.restore_fallback`` / ``mutable.log_walkback``). Host-side
+    events only: unlike :func:`record`, these fire at execution time,
+    never inside traced code.
     """
     for log in _STACK:
         log.counters[name] += n
@@ -249,6 +252,15 @@ def dense_join_flops(rows: int, cols: int, m: int) -> float:
 def sparse_join_flops(rows: int, cols: int, cap: int) -> float:
     """gather_dot work: 2·rows·cols·cap — the true sparse-dot cost."""
     return 2.0 * rows * cols * cap
+
+
+def delta_join_flops(delta_rows: int, corpus_rows: int, depth: float) -> float:
+    """Unpruned work of a mutable-index delta join: the delta must be
+    scored against every live row in both directions, but (new × new) is
+    covered once — 2·delta·corpus·depth, where ``depth`` is ``mlanes``
+    (dense) or the ELL ``cap`` (sparse). The measured ``flops`` on a
+    ``serving/delta-join`` record is the post-pruning fraction of this."""
+    return 2.0 * delta_rows * corpus_rows * depth
 
 
 # ---------------------------------------------------------------------------

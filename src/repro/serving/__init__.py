@@ -16,10 +16,17 @@ corpus is fixed and queries stream in. This package amortizes all of it:
 - :mod:`repro.serving.server` — :class:`RetrievalServer`: request batching
   at step boundaries, one jit'd ``query_topk`` per step, sharded partial
   merge, LRU result cache.
+- :mod:`repro.serving.mutable` — :class:`MutableAPSSIndex`: a live corpus
+  over the same machinery — WAL-backed append/delete log, delta similarity
+  join keeping a standing top-k graph current at cost proportional to the
+  delta, tombstones + threshold-triggered compaction, bit-identical to a
+  fresh rebuild after any mutation sequence.
 
-See DESIGN.md §6 for the index layout and the amortization model.
+See DESIGN.md §6 for the index layout and the amortization model, §9 for
+the live-corpus log and delta join.
 """
 
 from repro.serving.index import APSSIndex, build_index  # noqa: F401
+from repro.serving.mutable import MutableAPSSIndex  # noqa: F401
 from repro.serving.query import query_topk  # noqa: F401
 from repro.serving.server import RetrievalResult, RetrievalServer  # noqa: F401

@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.apss import normalize_rows
 from repro.planner import telemetry
 from repro.serving.index import APSSIndex
+from repro.serving.mutable import MutableAPSSIndex
 from repro.serving.query import query_topk
 
 
@@ -73,7 +74,11 @@ class RetrievalServer:
     """Batched online retrieval over a prebuilt :class:`APSSIndex`.
 
     Args:
-      index: built once via :func:`~repro.serving.index.build_index`.
+      index: built once via :func:`~repro.serving.index.build_index`, or a
+        live :class:`~repro.serving.mutable.MutableAPSSIndex` — mutations
+        bump its ``version``, which invalidates every cached answer
+        (result indices are then global row ids, stable across
+        compaction).
       threshold / k: fixed per server (one compiled executable).
       max_batch: padded batch width; requests beyond it wait for the next
         step boundary.
@@ -133,8 +138,11 @@ class RetrievalServer:
         self.backoff_s = float(backoff_s)
         self.ttl_s = ttl_s
         self.fault_plan = fault_plan
+        # entries: (result, born, index version at scoring time) — fresh
+        # hits require the version to still match, so a mutation
+        # invalidates every prior entry without touching the dict
         self._cache: collections.OrderedDict[
-            str, tuple[RetrievalResult, float]
+            str, tuple[RetrievalResult, float, int]
         ] = collections.OrderedDict()
         # pending entries: (rid, query, cache_key, absolute deadline | inf)
         self._pending: collections.deque[
@@ -238,10 +246,16 @@ class RetrievalServer:
                 try:
                     if self.fault_plan is not None:
                         self.fault_plan.fail_point(f"serving.{tier}")
-                    m = query_topk(
-                        self.index, Qj, self.threshold, self.k,
-                        block_q=self.block_q, use_kernel=use_k,
-                    )
+                    if isinstance(self.index, MutableAPSSIndex):
+                        m = self.index.query(
+                            np.asarray(Qj), self.threshold, self.k,
+                            block_q=self.block_q, use_kernel=use_k,
+                        )
+                    else:
+                        m = query_topk(
+                            self.index, Qj, self.threshold, self.k,
+                            block_q=self.block_q, use_kernel=use_k,
+                        )
                     if nth > 0:
                         self._degraded += 1
                         telemetry.incr("serving.degraded")
@@ -348,30 +362,35 @@ class RetrievalServer:
         h.update(np.int32(self.k).tobytes())
         return h.hexdigest()
 
+    def _index_version(self) -> int:
+        """Mutable indexes bump ``version`` per mutation; immutable = 0."""
+        return int(getattr(self.index, "version", 0))
+
     def _cache_get(
         self, key: str, *, stale_ok: bool = False
     ) -> Optional[RetrievalResult]:
-        """Fresh hits only by default; ``stale_ok`` ignores ``ttl_s`` —
-        the last-resort answer tier when every scoring tier is down."""
+        """Fresh hits only by default: in-TTL AND scored against the
+        current index version (a post-mutation query must never see a
+        pre-mutation answer). ``stale_ok`` ignores both — the explicit
+        last-resort tier when every scoring tier is down."""
         if self.cache_size <= 0:
             return None
         hit = self._cache.get(key)
         if hit is None:
             return None
-        res, born = hit
-        if (
-            not stale_ok
-            and self.ttl_s is not None
-            and time.monotonic() - born > self.ttl_s
-        ):
-            return None
+        res, born, version = hit
+        if not stale_ok:
+            if version != self._index_version():
+                return None
+            if self.ttl_s is not None and time.monotonic() - born > self.ttl_s:
+                return None
         self._cache.move_to_end(key)
         return res
 
     def _cache_put(self, key: str, res: RetrievalResult) -> None:
         if self.cache_size <= 0:
             return
-        self._cache[key] = (res, time.monotonic())
+        self._cache[key] = (res, time.monotonic(), self._index_version())
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)

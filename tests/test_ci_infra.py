@@ -69,6 +69,15 @@ def _valid_doc():
                 ])},
             },
         },
+        "mutable": {
+            "n": 1024, "m": 128, "threshold": 0.2, "k": 16, "block": 64,
+            "deltas": [
+                {"delta": 16, "delta_fraction": 1 / 64, "append_s": 0.01,
+                 "rebuild_s": 0.08, "speedup": 8.0},
+                {"delta": 256, "delta_fraction": 1 / 4, "append_s": 0.03,
+                 "rebuild_s": 0.06, "speedup": 2.0},
+            ],
+        },
     }
 
 
@@ -82,6 +91,8 @@ def test_valid_doc_passes():
     ("planner", "profile", "gather_gflops"),
     ("planner", "mesh2d"),
     ("planner", "corpora", "sparse_lowdens", "entries", 0, "measured_us"),
+    ("mutable",),
+    ("mutable", "deltas", 0, "speedup"),
 ])
 def test_missing_key_fails_with_path(path):
     doc = _valid_doc()
@@ -128,6 +139,24 @@ def test_sparse_regime_gate():
     doc["planner"]["corpora"]["sparse_lowdens"]["summary"]["density"] = 0.2
     with pytest.raises(SchemaError, match="sparse regime"):
         check(doc)
+
+
+def test_mutable_lane_gates_small_delta_speedup():
+    """The live-corpus acceptance bar (ISSUE 7): some delta <= n/16 must
+    show append+delta-join >= 5x faster than a full rebuild."""
+    doc = _valid_doc()
+    doc["mutable"]["deltas"][0]["speedup"] = 3.0
+    with pytest.raises(SchemaError, match=">= 5x"):
+        check(doc)
+    # a big-delta lane alone can't satisfy the gate either
+    doc = _valid_doc()
+    doc["mutable"]["deltas"] = [doc["mutable"]["deltas"][1]]
+    with pytest.raises(SchemaError, match="no delta <= n/16"):
+        check(doc)
+    # the n/4 lane is informational: its speedup is not gated
+    doc = _valid_doc()
+    doc["mutable"]["deltas"][1]["speedup"] = 0.9
+    check(doc)
 
 
 def test_cli_roundtrip(tmp_path, capsys):
@@ -238,6 +267,7 @@ def test_ci_workflow_wires_the_gate():
         / ".github" / "workflows" / "ci.yml"
     ).read_text()
     assert "benchmarks.check_schema" in wf
+    assert "benchmarks.bench_mutable" in wf  # the live-corpus lane feeds the gate
     assert "xla_force_host_platform_device_count=8" in wf
     assert "fail-fast: false" in wf
     assert "PYTEST_NUM_SHARDS" in wf

@@ -1,0 +1,380 @@
+"""Metamorphic mutation tests for MutableAPSSIndex (fixed-seed twin).
+
+The invariant under test: after ANY interleaving of append / delete /
+query / compact, the standing similarity graph and query results are
+**bit-equal** to a fresh index built from the surviving rows in their
+original order. A host-side reference model tracks (gid, raw row) pairs;
+the oracle is simply a fresh ``MutableAPSSIndex`` over those rows, with
+its 0..n-1 gids translated through the survivor list.
+
+``tests/test_mutable_properties.py`` is the hypothesis-driven twin of the
+metamorphic sequence test; this file is the fixed-seed version that runs
+everywhere (the ``test_sparse.py`` pattern), plus the edges: empty deltas,
+delete-everything, duplicate-row ties, the kernel lane, the no-retrace
+guard, durability meta checks, and the server LRU-invalidation regression.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.apss import apss_reference
+from repro.core.sparse import from_dense, to_dense
+from repro.planner import telemetry
+from repro.robust.faults import Fault, FaultPlan
+from repro.serving import MutableAPSSIndex, RetrievalServer
+from repro.serving.query import TRACE_COUNTS
+
+T = 0.15
+K = 8
+M = 24
+CAP = 16  # pinned ELL width: sparse bit-equality requires equal caps
+
+
+def _rows(rng, n, sparse=False):
+    """Raw (pre-normalization) rows; sparse-ish rows zero most entries."""
+    D = rng.normal(size=(n, M)).astype(np.float32)
+    if sparse:
+        mask = rng.random((n, M)) < 0.25
+        # every row keeps at least one coordinate
+        mask[np.arange(n), rng.integers(0, M, n)] = True
+        D = np.where(mask, D, 0.0).astype(np.float32)
+    return D
+
+
+def _fresh(rows_by_gid, kind):
+    """The oracle: rebuild from scratch over surviving rows in gid order."""
+    gids = [g for g, _ in rows_by_gid]
+    if rows_by_gid:
+        D = np.stack([r for _, r in rows_by_gid])
+    else:
+        D = np.zeros((0, M), np.float32)
+    oracle = MutableAPSSIndex(
+        D if len(rows_by_gid) else None,
+        threshold=T, k=K, kind=kind, cap=CAP,
+    )
+    return oracle, np.asarray(gids, np.int64)
+
+
+def _translate(indices, surv):
+    """Oracle physical gids (0..n-1) → the mutated index's global ids."""
+    return np.where(indices >= 0, surv[np.maximum(indices, 0)], -1)
+
+
+def _assert_state_equal(mi, model, queries):
+    """Graph AND query results bit-equal between mutated index and oracle."""
+    oracle, surv = _fresh(model, mi.kind or "dense")
+    gids, g = mi.graph()
+    assert np.array_equal(gids, surv)
+    if len(model):
+        ogids, og = oracle.graph()
+        assert np.array_equal(g.values, og.values)
+        assert np.array_equal(g.indices, _translate(og.indices, surv))
+        assert np.array_equal(g.counts, og.counts)
+    r = mi.query(queries)
+    ro = oracle.query(queries)
+    assert np.array_equal(r.values, ro.values)
+    if len(model):
+        assert np.array_equal(r.indices, _translate(ro.indices, surv))
+    assert np.array_equal(r.counts, ro.counts)
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+def test_append_then_delete_then_compact_bit_equal(kind):
+    rng = np.random.default_rng(0)
+    D = _rows(rng, 48, sparse=kind == "sparse")
+    Q = _rows(rng, 5, sparse=kind == "sparse")
+    mi = MutableAPSSIndex(D[:32], threshold=T, k=K, kind=kind, cap=CAP)
+    model = [(g, D[g]) for g in range(32)]
+    _assert_state_equal(mi, model, Q)
+    mi.append(D[32:])
+    model += [(g, D[g]) for g in range(32, 48)]
+    _assert_state_equal(mi, model, Q)
+    mi.delete([3, 9, 40])
+    model = [(g, r) for g, r in model if g not in (3, 9, 40)]
+    _assert_state_equal(mi, model, Q)
+    mi.compact()
+    _assert_state_equal(mi, model, Q)
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_metamorphic_random_sequences(kind, seed):
+    """Random interleaved append/delete/query/compact, oracle-checked
+    after EVERY step — the headline metamorphic property, fixed-seed."""
+    rng = np.random.default_rng(seed)
+    sparse = kind == "sparse"
+    Q = _rows(rng, 4, sparse=sparse)
+    mi = MutableAPSSIndex(threshold=T, k=K, kind=kind, cap=CAP)
+    model = []
+    for _ in range(14):
+        live = [g for g, _ in model]
+        op = rng.choice(["append", "delete", "compact", "query"])
+        if op == "append" or not live:
+            n_new = int(rng.integers(1, 9))
+            raw = _rows(rng, n_new, sparse=sparse)
+            gids = mi.append(raw)
+            model += list(zip(gids, raw))
+        elif op == "delete":
+            n_del = int(rng.integers(1, min(4, len(live)) + 1))
+            victims = sorted(
+                int(g) for g in rng.choice(live, size=n_del, replace=False)
+            )
+            mi.delete(victims)
+            model = [(g, r) for g, r in model if g not in set(victims)]
+        elif op == "compact":
+            mi.compact()
+        _assert_state_equal(mi, model, Q)
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+def test_sparse_input_path_matches_dense_payload(kind):
+    """Appending a SparseCorpus is identical to appending its dense form
+    (the WAL canonicalizes to raw dense either way)."""
+    rng = np.random.default_rng(4)
+    D = _rows(rng, 24, sparse=True)
+    sp = from_dense(D)
+    a = MutableAPSSIndex(threshold=T, k=K, kind=kind, cap=CAP)
+    a.append(sp)
+    b = MutableAPSSIndex(D, threshold=T, k=K, kind=kind, cap=CAP)
+    ga, gb = a.graph()[1], b.graph()[1]
+    assert np.array_equal(ga.values, gb.values)
+    assert np.array_equal(ga.indices, gb.indices)
+    assert np.asarray(to_dense(sp)).shape == D.shape
+
+
+def test_graph_values_match_brute_force_reference():
+    """Anchor against the O(n²) oracle: the standing graph is the paper's
+    all-pairs result (values/counts; tolerance-based, not bit)."""
+    rng = np.random.default_rng(5)
+    D = _rows(rng, 40)
+    mi = MutableAPSSIndex(D[:24], threshold=T, k=K)
+    mi.append(D[24:])
+    ref = apss_reference(D / np.linalg.norm(D, axis=1, keepdims=True), T, K)
+    _, g = mi.graph()
+    assert np.array_equal(g.counts, np.asarray(ref.counts))
+    finite = g.values > -np.inf
+    assert np.array_equal(finite, np.asarray(ref.values) > -np.inf)
+    assert np.allclose(g.values[finite], np.asarray(ref.values)[finite],
+                       atol=1e-5)
+
+
+def test_duplicate_rows_tie_break_is_canonical():
+    """Exact duplicate rows force score ties; the (value desc, position
+    asc) canonical order must make mutated == rebuilt bit-for-bit."""
+    rng = np.random.default_rng(6)
+    base = _rows(rng, 12)
+    dup = np.concatenate([base, base[:5]])  # 5 exact duplicates
+    mi = MutableAPSSIndex(base, threshold=T, k=K)
+    mi.append(base[:5])
+    model = [(g, dup[g]) for g in range(17)]
+    mi.delete([2])  # deleting one twin re-ranks its duplicate's row
+    model = [(g, r) for g, r in model if g != 2]
+    _assert_state_equal(mi, model, base[:3])
+    mi.compact()
+    _assert_state_equal(mi, model, base[:3])
+
+
+def test_empty_delta_and_empty_delete_are_noops():
+    rng = np.random.default_rng(7)
+    mi = MutableAPSSIndex(_rows(rng, 16), threshold=T, k=K)
+    v = mi.version
+    assert mi.append(np.zeros((0, M), np.float32)) == []
+    assert mi.delete([]) == 0
+    assert mi.version == v
+
+
+def test_delete_everything_then_revive():
+    rng = np.random.default_rng(8)
+    D = _rows(rng, 16)
+    mi = MutableAPSSIndex(D, threshold=T, k=K)
+    mi.delete(list(range(16)))
+    assert mi.n == 0
+    r = mi.query(D[:3])
+    assert np.all(r.indices == -1) and np.all(r.counts == 0)
+    gids = mi.append(D[:8])
+    assert gids == list(range(16, 24))  # gids are never reused
+    _assert_state_equal(mi, list(zip(gids, D[:8])), D[:3])
+
+
+def test_auto_compact_on_tombstone_fraction():
+    rng = np.random.default_rng(9)
+    D = _rows(rng, 32)
+    mi = MutableAPSSIndex(D, threshold=T, k=K, compact_threshold=0.25)
+    with telemetry.CommLog() as log:
+        mi.delete(list(range(8)))  # 8/32 = exactly the threshold
+    assert log.counters["serving.compactions"] == 1
+    assert mi._ndead == 0
+    _assert_state_equal(mi, [(g, D[g]) for g in range(8, 32)], D[:3])
+
+
+def test_input_validation():
+    rng = np.random.default_rng(10)
+    mi = MutableAPSSIndex(_rows(rng, 16), threshold=T, k=K)
+    with pytest.raises(ValueError, match="non-finite"):
+        mi.append(np.full((2, M), np.nan, np.float32))
+    with pytest.raises(ValueError, match="!= index m"):
+        mi.append(np.ones((2, M + 1), np.float32))
+    with pytest.raises(KeyError, match="unknown"):
+        mi.delete([99])
+    with pytest.raises(ValueError, match="duplicate"):
+        mi.delete([1, 1])
+    with pytest.raises(ValueError, match="power of two"):
+        MutableAPSSIndex(threshold=T, block_rows=48)
+
+
+# -- kernel lane -------------------------------------------------------------
+
+
+def test_kernel_lane_matches_oracle_kernel():
+    """The dense kernel path serves through the zero-copy APSSIndex view;
+    random (tie-free) data must be bit-equal to the oracle's kernel path."""
+    rng = np.random.default_rng(11)
+    D = _rows(rng, 96)
+    mi = MutableAPSSIndex(D[:64], threshold=T, k=K, block_rows=64)
+    mi.append(D[64:])
+    mi.delete([0, 70])
+    keep = [i for i in range(96) if i not in (0, 70)]
+    oracle = MutableAPSSIndex(D[keep], threshold=T, k=K, block_rows=64)
+    surv = np.asarray(keep, np.int64)
+    Q = _rows(rng, 5)
+    r = mi.query(Q, use_kernel=True)
+    ro = oracle.query(Q, use_kernel=True)
+    assert np.array_equal(r.values, ro.values)
+    assert np.array_equal(r.indices, _translate(ro.indices, surv))
+    rx = mi.query(Q)  # and the kernel lane agrees with the XLA lane
+    assert np.array_equal(r.values, rx.values)
+    assert np.array_equal(r.indices, rx.indices)
+
+
+def test_kernel_lane_guards():
+    rng = np.random.default_rng(12)
+    mi = MutableAPSSIndex(_rows(rng, 16), threshold=T, k=K)
+    with pytest.raises(ValueError, match="threshold > 0"):
+        # tombstoned rows are zero vectors in the kernel view: t <= 0
+        # would match them, so the lane refuses
+        mi.query(_rows(rng, 2), threshold=0.0, use_kernel=True)
+    ms = MutableAPSSIndex(_rows(rng, 16, sparse=True), threshold=T, k=K,
+                          kind="sparse")
+    with pytest.raises(NotImplementedError, match="layout-stable"):
+        ms.query(_rows(rng, 2), use_kernel=True)
+
+
+# -- no-retrace guard --------------------------------------------------------
+
+
+def test_no_retrace_on_repeated_same_shape_appends():
+    """Same-shape appends within capacity must trace NOTHING new: deltas
+    are pow2-bucketed, worklists pow2-padded, and row counts / liveness
+    enter the jitted inners as traced values (the pad_worklist trick
+    extended to the delta-join path)."""
+    rng = np.random.default_rng(13)
+    mi = MutableAPSSIndex(_rows(rng, 16), threshold=T, k=K, block_rows=64)
+    Q = _rows(rng, 4)
+    for _ in range(2):  # warmup: trace every delta-join shape once
+        mi.append(_rows(rng, 8))
+        mi.query(Q)
+    before = dict(TRACE_COUNTS)
+    for _ in range(2):  # rows 32→40→48, all within the 64-row capacity
+        mi.append(_rows(rng, 8))
+        mi.query(Q)
+    mi.delete([int(mi.graph()[0][0])])
+    mi.delete([int(mi.graph()[0][0])])
+    assert dict(TRACE_COUNTS) == before
+
+
+# -- durability meta ---------------------------------------------------------
+
+
+def test_reopen_restores_bit_identical_state(tmp_path):
+    rng = np.random.default_rng(14)
+    D = _rows(rng, 48)
+    d = str(tmp_path / "idx")
+    mi = MutableAPSSIndex(D[:32], threshold=T, k=K, directory=d)
+    mi.append(D[32:])
+    mi.delete([1, 33])
+    g1 = mi.graph()
+    re = MutableAPSSIndex(corpus=None, threshold=T, k=K, directory=d)
+    g2 = re.graph()
+    assert np.array_equal(g1[0], g2[0])
+    assert np.array_equal(g1[1].values, g2[1].values)
+    assert np.array_equal(g1[1].indices, g2[1].indices)
+    assert np.array_equal(g1[1].counts, g2[1].counts)
+    Q = _rows(rng, 3)
+    ra, rb = mi.query(Q), re.query(Q)
+    assert np.array_equal(ra.values, rb.values)
+    assert np.array_equal(ra.indices, rb.indices)
+
+
+def test_reopen_guards(tmp_path):
+    rng = np.random.default_rng(15)
+    d = str(tmp_path / "idx")
+    MutableAPSSIndex(_rows(rng, 16), threshold=T, k=K, directory=d)
+    with pytest.raises(ValueError, match="corpus=None to resume"):
+        MutableAPSSIndex(_rows(rng, 8), threshold=T, k=K, directory=d)
+    with pytest.raises(ValueError, match="meta mismatch"):
+        MutableAPSSIndex(corpus=None, threshold=0.9, k=K, directory=d)
+
+
+# -- telemetry ---------------------------------------------------------------
+
+
+def test_delta_join_telemetry():
+    rng = np.random.default_rng(16)
+    D = _rows(rng, 96)
+    with telemetry.CommLog() as log:
+        mi = MutableAPSSIndex(D[:64], threshold=T, k=K)
+        mi.append(D[64:])
+        mi.delete([0])
+        mi.compact()
+    assert log.counters["serving.appends"] == 2
+    assert log.counters["serving.deletes"] == 1
+    assert log.counters["serving.compactions"] == 1
+    recs = log.by_variant("serving/delta-join")
+    assert len(recs) == 2
+    second = recs[1]
+    assert second.extra["delta"] == 32
+    assert second.extra["model_flops"] == telemetry.delta_join_flops(
+        32, 96, mi._mlanes
+    )
+    assert 0.0 < second.extra["live_fraction_rows"] <= 1.0
+    assert second.live_tiles is not None and second.flops > 0
+
+
+# -- server LRU invalidation regression (ISSUE 7 satellite) ------------------
+
+
+def test_server_cache_invalidates_on_mutation():
+    """REGRESSION: the LRU is keyed by (query digest, index version) — a
+    post-append query must never return a pre-append answer."""
+    rng = np.random.default_rng(17)
+    D = _rows(rng, 80)
+    mi = MutableAPSSIndex(D[:64], threshold=T, k=K)
+    srv = RetrievalServer(mi, threshold=T, k=K, max_batch=4)
+    q = D[0] / np.linalg.norm(D[0])
+    r1 = srv.serve([q])[0]
+    assert srv.serve([q])[0].cached  # same version: cache hit
+    mi.append(D[64:])
+    r3 = srv.serve([q])[0]
+    assert not r3.cached  # version bumped: entry is invisible to fresh gets
+    assert r3.count >= r1.count
+    r4 = srv.serve([q])[0]  # re-cached at the new version
+    assert r4.cached and np.array_equal(r4.values, r3.values)
+    mi.delete([int(mi.graph()[0][-1])])
+    assert not srv.serve([q])[0].cached  # deletes invalidate too
+
+
+def test_server_stale_tier_may_serve_pre_mutation():
+    """The ONLY sanctioned path to a pre-mutation answer: every scoring
+    tier down, explicit stale tier, status='stale'."""
+    rng = np.random.default_rng(18)
+    D = _rows(rng, 80)
+    mi = MutableAPSSIndex(D[:64], threshold=T, k=K)
+    srv = RetrievalServer(mi, threshold=T, k=K, max_batch=4, max_retries=0)
+    q = D[0] / np.linalg.norm(D[0])
+    warm = srv.serve([q])[0]
+    mi.append(D[64:])
+    srv.fault_plan = FaultPlan([Fault("error", scope="serving.xla", times=9)])
+    rs = srv.serve([q])[0]
+    assert rs.status == "stale" and rs.cached
+    assert np.array_equal(rs.values, warm.values)
+    assert srv.stats.stale == 1

@@ -315,3 +315,103 @@ def test_sweep_records_step_times(corpus, tmp_path):
     )
     sweep.run()
     assert len(timer.history[0]) == sweep.B  # one wall time per ring step
+
+
+# ---------------------------------------------------------------------------
+# Fault type 4 (ISSUE 7): mutation durability — kill mid-append, WAL rot
+# ---------------------------------------------------------------------------
+
+
+def _mutable_graph_equal(a, b):
+    ga, gb = a.graph(), b.graph()
+    return np.array_equal(ga[0], gb[0]) and _matches_equal(ga[1], gb[1])
+
+
+@pytest.mark.parametrize("seam", ["mutable.append", "mutable.commit"])
+def test_mutable_kill_mid_append_resumes_bit_identical(tmp_path, seam):
+    """Kill between WAL write and apply ('mutable.append') or between
+    apply and snapshot ('mutable.commit'): reopening replays the logged
+    op and lands bit-identical to the uninterrupted run."""
+    from repro.serving import MutableAPSSIndex
+
+    rng = np.random.default_rng(20)
+    D = rng.normal(size=(64, 16)).astype(np.float32)
+    ref = MutableAPSSIndex(D, threshold=T, k=K)
+    plan = FaultPlan([Fault("kill", scope=seam, step=2)])
+    d = str(tmp_path / "kill")
+    mi = MutableAPSSIndex(
+        D[:48], threshold=T, k=K, directory=d, fault_plan=plan
+    )
+    with pytest.raises(SweepKilled):
+        mi.append(D[48:])
+    assert plan.fired[f"kill:{seam}"] == 1
+    with telemetry.CommLog() as log:
+        resumed = MutableAPSSIndex(corpus=None, threshold=T, k=K, directory=d)
+    assert log.counters["mutable.replayed_ops"] == 1
+    assert _mutable_graph_equal(resumed, ref)
+    # and the resumed index keeps working: next op takes the next WAL seq
+    resumed.delete([0])
+    ref.delete([0])
+    assert _mutable_graph_equal(resumed, ref)
+
+
+def test_mutable_corrupt_log_walks_back_one_op(tmp_path):
+    """Bit-rot in the newest WAL entry: reopening detects the digest
+    mismatch, warns, walks back exactly that op, and stays serviceable."""
+    from repro.serving import MutableAPSSIndex
+
+    rng = np.random.default_rng(21)
+    D = rng.normal(size=(64, 16)).astype(np.float32)
+    d = str(tmp_path / "rot")
+    # kill before the snapshot so op 2 exists ONLY in the log...
+    plan = FaultPlan([Fault("kill", scope="mutable.commit", step=2)])
+    mi = MutableAPSSIndex(
+        D[:48], threshold=T, k=K, directory=d, fault_plan=plan
+    )
+    with pytest.raises(SweepKilled):
+        mi.append(D[48:])
+    # ...then rot one byte of its payload on disk
+    step_dir = os.path.join(d, "log", "step_%010d" % 2)
+    leaf = [f for f in os.listdir(step_dir) if f.endswith(".npy")][0]
+    FaultPlan(seed=1).corrupt_file(os.path.join(step_dir, leaf))
+    with telemetry.CommLog() as log:
+        with pytest.warns(UserWarning, match="walking back"):
+            walked = MutableAPSSIndex(
+                corpus=None, threshold=T, k=K, directory=d
+            )
+    assert log.counters["mutable.log_walkback"] == 1
+    assert "mutable.replayed_ops" not in log.counters
+    # state equals the pre-op oracle — the corrupt append never happened
+    assert _mutable_graph_equal(
+        walked, MutableAPSSIndex(D[:48], threshold=T, k=K)
+    )
+    # the walked-back seq is reusable: redoing the append works and
+    # matches the uninterrupted end state
+    walked.append(D[48:])
+    assert _mutable_graph_equal(
+        walked, MutableAPSSIndex(D, threshold=T, k=K)
+    )
+
+
+def test_mutable_snapshot_fallback_counts(tmp_path):
+    """Corrupting the newest SNAPSHOT (not the log) falls back one kept
+    snapshot and replays the op gap from the WAL."""
+    from repro.serving import MutableAPSSIndex
+
+    rng = np.random.default_rng(22)
+    D = rng.normal(size=(64, 16)).astype(np.float32)
+    d = str(tmp_path / "snaprot")
+    mi = MutableAPSSIndex(D[:48], threshold=T, k=K, directory=d)
+    mi.append(D[48:])
+    state_dir = os.path.join(d, "state")
+    step_dir = os.path.join(state_dir, "step_%010d" % 2)
+    leaf = [f for f in os.listdir(step_dir) if f.endswith(".npy")][0]
+    FaultPlan(seed=2).corrupt_file(os.path.join(step_dir, leaf))
+    with telemetry.CommLog() as log:
+        with pytest.warns(UserWarning, match="falling back"):
+            resumed = MutableAPSSIndex(
+                corpus=None, threshold=T, k=K, directory=d
+            )
+    assert log.counters["mutable.restore_fallback"] == 1
+    assert log.counters["mutable.replayed_ops"] == 1  # op 2 redone from WAL
+    assert _mutable_graph_equal(resumed, mi)
