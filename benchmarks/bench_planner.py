@@ -136,6 +136,7 @@ def measure(
         "mesh_devices": 1 if mesh is None else jax.device_count(),
         "corpora": {},
     }
+    measured_estimates = []
     corpora = _corpora(smoke=smoke)
     for name, corpus in corpora.items():
         plan = plan_apss(
@@ -144,6 +145,7 @@ def measure(
         rec = _measure_families(
             plan, corpus, threshold, k, mesh, iters, max_families
         )
+        measured_estimates.extend(plan.estimates)
         out["corpora"][name] = rec
         _print_corpus(name, rec)
 
@@ -164,7 +166,19 @@ def measure(
             "mesh": {str(a): int(v) for a, v in mesh2.shape.items()},
             "corpora": {"sparse_lowdens": rec},
         }
+        measured_estimates.extend(plan2.estimates)
         _print_corpus("sparse_lowdens @ (4,2)", rec)
+
+    # Drift lane: every measured family above is a predicted-vs-measured
+    # pair — fold them into a DriftReport so a rotten CalibrationProfile is
+    # flagged by the bench itself, not discovered via a within-2x MISS.
+    from repro.obs import drift
+
+    report = drift.drift_report(
+        drift.residuals_from_estimates(measured_estimates), profile=profile
+    )
+    out["drift"] = report.as_dict()
+    print(report.describe())
     return out
 
 
@@ -202,12 +216,36 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.5)
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the"
+                         " plan/measure runs (nested plan -> execute ->"
+                         " ring_step spans) to PATH")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot to PATH (.prom/.txt ->"
+                         " Prometheus text, otherwise JSON)")
     args = ap.parse_args()
 
-    r = measure(
-        smoke=args.smoke, threshold=args.threshold, k=args.k,
-        iters=2 if args.smoke else args.iters,
-    )
+    import contextlib
+
+    from repro.obs import MetricsRegistry, Tracer, export
+
+    tracer = Tracer() if args.trace_out else None
+    registry = MetricsRegistry() if args.metrics_out else None
+    with contextlib.ExitStack() as stack:
+        if registry is not None:
+            stack.enter_context(registry)
+        if tracer is not None:
+            stack.enter_context(tracer)
+        r = measure(
+            smoke=args.smoke, threshold=args.threshold, k=args.k,
+            iters=2 if args.smoke else args.iters,
+        )
+    if tracer is not None:
+        export.write_chrome_trace(args.trace_out, tracer, registry)
+        print(f"[obs] trace -> {args.trace_out}")
+    if registry is not None:
+        export.write_metrics(args.metrics_out, registry)
+        print(f"[obs] metrics -> {args.metrics_out}")
     for name, c in r["corpora"].items():
         ok = "OK" if c["chosen_within_2x"] else "MISS"
         print(f"{name}: {c['chosen']} within-2x={ok} ({c['chosen_over_best']:.2f}x)")

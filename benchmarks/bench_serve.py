@@ -8,7 +8,11 @@ regime (sparse clustered-Zipfian corpus, default n=65536 m=8192):
 
 - ``index_build_us``     one-time cost of ``build_index``
 - ``batches[B]``         per-query latency + QPS at batch 1/8/64 against
-                         the prebuilt index (one ``query_topk`` per batch)
+                         the prebuilt index (one ``query_topk`` per batch),
+                         plus a per-call latency distribution
+                         (``latency_us``: p50/p95/p99 off an
+                         ``obs.metrics.Histogram`` — the serving
+                         latency-histogram lane checked by the CI schema)
 - ``rebuild``            the status-quo baseline: every batch-64 call
                          rebuilds the index from the raw corpus first
 - ``amortized_speedup_batch64``  rebuild ÷ indexed per-query latency —
@@ -43,12 +47,14 @@ def measure(
     threshold: float = 0.5,
     k: int = 32,
     iters: int = 3,
+    latency_iters: int = 20,
     seed: int = 0,
 ) -> dict:
     import jax
 
     from benchmarks.common import time_fn
     from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.obs.metrics import Histogram
     from repro.serving import build_index, query_topk
     from repro.serving.index import index_nbytes
 
@@ -84,11 +90,25 @@ def measure(
             lambda q: query_topk(index, q, threshold, k),
             Q, warmup=1, iters=iters, return_result=True,
         )
+        # Per-call latency distribution: individually timed warm calls into
+        # an exponential-bucket histogram — the tail (p99) is what a serving
+        # deadline budget actually has to cover, and a mean can't show it.
+        hist = Histogram()
+        for _ in range(max(latency_iters, iters)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(query_topk(index, Q, threshold, k))
+            hist.observe(time.perf_counter() - t0)
         out["batches"][str(B)] = {
             "us_per_call": us,
             "us_per_query": us / B,
             "qps": 1e6 * B / us,
             "total_matches": int(np.asarray(res.counts).sum()),
+            "latency_us": {
+                "p50": hist.quantile(0.50) * 1e6,
+                "p95": hist.quantile(0.95) * 1e6,
+                "p99": hist.quantile(0.99) * 1e6,
+                "samples": hist.count,
+            },
         }
 
     # Status-quo baseline: rebuild every corpus-side structure per call
@@ -139,8 +159,11 @@ def main() -> None:
     print(f"index build: {r['index_build_us']/1e6:.2f}s "
           f"({r['index_bytes']/2**20:.0f} MiB)")
     for B, e in r["batches"].items():
+        lat = e["latency_us"]
         print(f"batch {B:>3}: {e['us_per_query']:.0f} us/query "
-              f"({e['qps']:.1f} QPS, {e['total_matches']} matches)")
+              f"({e['qps']:.1f} QPS, {e['total_matches']} matches) "
+              f"per-call p50/p95/p99 {lat['p50']:.0f}/{lat['p95']:.0f}/"
+              f"{lat['p99']:.0f} us ({lat['samples']} samples)")
     print(f"rebuild-per-call batch 64: {r['rebuild']['us_per_query']:.0f} "
           f"us/query -> amortized speedup "
           f"{r['amortized_speedup_batch64']:.1f}x")

@@ -63,9 +63,22 @@ def check_serving(doc: dict) -> None:
     )
     _require_keys(s["batches"], {"1", "8", "64"}, "$.serving.batches")
     for b, e in s["batches"].items():
+        where = f"$.serving.batches[{b}]"
         _require_keys(
-            e, {"us_per_call", "us_per_query", "qps", "total_matches"},
-            f"$.serving.batches[{b}]",
+            e,
+            {"us_per_call", "us_per_query", "qps", "total_matches",
+             "latency_us"},
+            where,
+        )
+        # the latency-histogram lane: a per-call distribution, not just a
+        # mean — p50 and p99 present, ordered, and positive
+        lat = e["latency_us"]
+        _require_keys(lat, {"p50", "p99"}, where + ".latency_us")
+        _require(lat["p50"] > 0, where + ".latency_us",
+                 "p50 must be positive")
+        _require(
+            lat["p50"] <= lat["p99"], where + ".latency_us",
+            f"p50 ({lat['p50']:.0f}us) exceeds p99 ({lat['p99']:.0f}us)",
         )
     _require(s["amortized_speedup_batch64"] > 0, "$.serving",
              "amortized_speedup_batch64 must be positive")

@@ -45,6 +45,9 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.obs import recorder as _recorder
+from repro.obs import trace as _trace
+
 _MANIFEST = "manifest.json"
 _STEP_RE = re.compile(r"^step_(\d{10})$")
 
@@ -200,7 +203,8 @@ class CheckpointManager:
         if step in self.all_steps():
             return
         if blocking:
-            save_checkpoint(state, self.directory, step)
+            with _trace.span("checkpoint/save", step=step):
+                save_checkpoint(state, self.directory, step)
             self._gc()
             return
         # Snapshot to host on the caller's thread (cheap device→host copy),
@@ -246,18 +250,24 @@ class CheckpointManager:
         if not candidates:
             return None, None
         last_err: Exception | None = None
-        for s in candidates:
-            try:
-                return load_checkpoint(self.directory, s, like=like), s
-            except CheckpointCorruptionError as e:
-                if not fallback:
-                    raise
-                warnings.warn(
-                    f"checkpoint step {s} corrupt ({e}); "
-                    f"falling back to previous kept step",
-                    stacklevel=2,
-                )
-                last_err = e
+        with _trace.span("checkpoint/restore", directory=self.directory):
+            for s in candidates:
+                try:
+                    return load_checkpoint(self.directory, s, like=like), s
+                except CheckpointCorruptionError as e:
+                    if not fallback:
+                        raise
+                    warnings.warn(
+                        f"checkpoint step {s} corrupt ({e}); "
+                        f"falling back to previous kept step",
+                        stacklevel=2,
+                    )
+                    _trace.event("corruption_fallback", step=s)
+                    _recorder.trigger(
+                        "checkpoint.corruption_fallback", step=s,
+                        error=str(e),
+                    )
+                    last_err = e
         raise CheckpointCorruptionError(
             f"every kept checkpoint in {self.directory} is corrupt"
         ) from last_err

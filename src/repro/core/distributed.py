@@ -1548,16 +1548,24 @@ def apss(
     (``profile=``, ``autotune=``, ``block_rows_choices=`` …) are forwarded
     to the planner.
     """
-    if distribution == "auto":
-        from repro.planner.plan import plan_apss
+    # Span wrap covers dispatch (trace time under jit, dispatch+execute in
+    # eager callers); per-ring-step child spans arrive via the StepTicker
+    # on the ApssStats record each entry point emits inside this span.
+    from repro.obs import trace
 
-        return plan_apss(D, threshold, k, mesh, **kwargs).run()
-    if distribution == "horizontal":
-        return apss_horizontal(D, threshold, k, mesh, **kwargs)
-    if distribution == "vertical":
-        return apss_vertical(D, threshold, k, mesh, **kwargs)
-    if distribution == "2d":
-        return apss_2d(D, threshold, k, mesh, **kwargs)
-    if distribution == "hierarchical":
-        return apss_horizontal_hierarchical(D, threshold, k, mesh, **kwargs)
-    raise ValueError(f"unknown distribution: {distribution}")
+    with trace.span("apss", distribution=distribution):
+        if distribution == "auto":
+            from repro.planner.plan import plan_apss
+
+            return plan_apss(D, threshold, k, mesh, **kwargs).run()
+        if distribution == "horizontal":
+            return apss_horizontal(D, threshold, k, mesh, **kwargs)
+        if distribution == "vertical":
+            return apss_vertical(D, threshold, k, mesh, **kwargs)
+        if distribution == "2d":
+            return apss_2d(D, threshold, k, mesh, **kwargs)
+        if distribution == "hierarchical":
+            return apss_horizontal_hierarchical(
+                D, threshold, k, mesh, **kwargs
+            )
+        raise ValueError(f"unknown distribution: {distribution}")

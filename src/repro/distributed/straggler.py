@@ -122,6 +122,17 @@ class StepTicker:
             return list(self.ticks)
 
     @property
+    def created(self) -> float:
+        """``perf_counter`` stamp at ticker creation (step 0's baseline)."""
+        return self._created
+
+    def tick_log(self) -> list[tuple[int, int, float]]:
+        """Settled ``(rank, step, t)`` ticks on the host ``perf_counter``
+        timeline — the seam ``obs.trace`` adapts into per-ring-step child
+        spans after the sweep's outputs are ready."""
+        return self._settled()
+
+    @property
     def n_steps(self) -> int:
         ticks = self._settled()
         return 1 + max((s for _, s, _ in ticks), default=-1)

@@ -15,12 +15,14 @@ CPU-scale demo:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import tempfile
 import time
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, Tracer, export
 from repro.planner import telemetry
 from repro.serving import MutableAPSSIndex, RetrievalServer
 
@@ -43,8 +45,31 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--block", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the"
+                         " mutation/serve loop to PATH")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot to PATH (.prom/.txt ->"
+                         " Prometheus text, otherwise JSON)")
     args = ap.parse_args()
 
+    tracer = Tracer() if args.trace_out else None
+    registry = MetricsRegistry() if args.metrics_out else None
+    with contextlib.ExitStack() as stack:
+        if registry is not None:
+            stack.enter_context(registry)
+        if tracer is not None:
+            stack.enter_context(tracer)
+        _run(args)
+    if tracer is not None:
+        export.write_chrome_trace(args.trace_out, tracer, registry)
+        print(f"[obs] trace -> {args.trace_out}")
+    if registry is not None:
+        export.write_metrics(args.metrics_out, registry)
+        print(f"[obs] metrics -> {args.metrics_out}")
+
+
+def _run(args) -> None:
     rng = np.random.default_rng(args.seed)
     D = rng.normal(size=(args.n, args.m)).astype(np.float32)
     kept: list[tuple[int, np.ndarray]] = []

@@ -26,6 +26,7 @@ CPU-scale demos (reduced configs):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -36,7 +37,6 @@ from repro.models.transformer import (
     decode_step,
     init_transformer,
     make_cache,
-    prefill,
 )
 
 
@@ -230,8 +230,35 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="retrieval mode: per-request deadline; late"
                          " requests are shed, not served")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the"
+                         " run (plan/execute/serving spans) to PATH")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot to PATH (.prom/.txt ->"
+                         " Prometheus text, otherwise JSON)")
     args = ap.parse_args()
 
+    from repro.obs import MetricsRegistry, Tracer, export
+
+    tracer = Tracer() if args.trace_out else None
+    registry = MetricsRegistry() if args.metrics_out else None
+    with contextlib.ExitStack() as stack:
+        # Registry first so finalize() (tracer exit) can observe sweep
+        # step-time/skew histograms into it.
+        if registry is not None:
+            stack.enter_context(registry)
+        if tracer is not None:
+            stack.enter_context(tracer)
+        _run_mode(args)
+    if tracer is not None:
+        export.write_chrome_trace(args.trace_out, tracer, registry)
+        print(f"[obs] trace -> {args.trace_out}")
+    if registry is not None:
+        export.write_metrics(args.metrics_out, registry)
+        print(f"[obs] metrics -> {args.metrics_out}")
+
+
+def _run_mode(args) -> None:
     if args.mode == "retrieval":
         run_retrieval(args)
         return

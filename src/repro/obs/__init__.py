@@ -1,0 +1,35 @@
+"""Observability layer: tracing, metrics, flight recording, drift detection.
+
+Five small modules, one guard discipline (``enabled()`` stacks, mirrored
+from ``planner.telemetry`` — zero cost when no sink is active):
+
+- :mod:`repro.obs.trace` — context-propagated span tree over every
+  execution path (plan/execute, ring steps via ``StepTicker``, serving
+  lifecycle, mutable WAL ops, checkpoints);
+- :mod:`repro.obs.metrics` — counters/gauges/exponential histograms,
+  absorbing the ``telemetry.incr`` namespace;
+- :mod:`repro.obs.export` — Chrome trace-event JSON (Perfetto) + metrics
+  snapshots;
+- :mod:`repro.obs.recorder` — bounded flight recorder auto-dumped on
+  fault firing, tier-down, and corruption fallback;
+- :mod:`repro.obs.drift` — predicted-vs-measured residuals and stale-
+  calibration flagging.
+
+See DESIGN.md §10 for the span taxonomy and metrics catalog.
+"""
+
+from repro.obs import drift, export, metrics, recorder, trace  # noqa: F401
+from repro.obs.drift import DriftReport, Residual, drift_report  # noqa: F401
+from repro.obs.export import write_chrome_trace, write_metrics  # noqa: F401
+from repro.obs.metrics import Histogram, MetricsRegistry  # noqa: F401
+from repro.obs.recorder import FlightRecorder  # noqa: F401
+from repro.obs.trace import Span, Tracer, annotate, event, span  # noqa: F401
+
+__all__ = [
+    "trace", "metrics", "export", "recorder", "drift",
+    "Tracer", "Span", "span", "event", "annotate",
+    "MetricsRegistry", "Histogram",
+    "FlightRecorder",
+    "DriftReport", "Residual", "drift_report",
+    "write_chrome_trace", "write_metrics",
+]

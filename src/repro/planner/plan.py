@@ -33,6 +33,7 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
+from repro.obs import trace
 from repro.planner import calibrate as _calibrate
 from repro.planner.costmodel import (
     CalibrationProfile,
@@ -392,9 +393,10 @@ def execute(
     cost model prices — not a per-call ``to_dense``/``from_dense``.
     """
     data = corpus if prepared else _to_representation(corpus, cfg.sparse)
-    if _has_host_stage(cfg):
-        return _dispatch(cfg, data, threshold, k, mesh)
-    return _execute_traced(data, cfg, float(threshold), k, mesh)
+    with trace.span("execute", config=cfg.name):
+        if _has_host_stage(cfg):
+            return _dispatch(cfg, data, threshold, k, mesh)
+        return _execute_traced(data, cfg, float(threshold), k, mesh)
 
 
 @functools.partial(
@@ -495,6 +497,21 @@ def plan_apss(
     measured winner — the escape hatch for backend quirks (eager overhead,
     collective implementations) no closed-form model carries.
     """
+    with trace.span("plan", autotune=autotune):
+        p = _plan_apss_impl(
+            corpus, threshold, k, mesh, profile=profile,
+            block_rows_choices=block_rows_choices,
+            include_kernel=include_kernel, autotune=autotune,
+            autotune_top=autotune_top, sample_rows=sample_rows, seed=seed,
+        )
+        trace.annotate(chosen=p.config.name, candidates=len(p.estimates))
+        return p
+
+
+def _plan_apss_impl(
+    corpus, threshold, k, mesh, *, profile, block_rows_choices,
+    include_kernel, autotune, autotune_top, sample_rows, seed,
+) -> Plan:
     from repro.serving.index import APSSIndex
 
     s = summarize_corpus(

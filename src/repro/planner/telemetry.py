@@ -160,7 +160,15 @@ class CommLog:
         return self
 
     def __exit__(self, *exc) -> None:
-        _STACK.remove(self)
+        # LIFO pop, asserted: ``remove(self)`` would strip the *first*
+        # occurrence, so re-entering the same log nested (legal — each
+        # entry just means "receive records") corrupted the stack order.
+        if not _STACK or _STACK[-1] is not self:
+            raise RuntimeError(
+                "CommLog exited out of LIFO order (another log — or another "
+                "entry of this log — is still active above it)"
+            )
+        _STACK.pop()
 
     @property
     def last(self) -> ApssStats:
@@ -178,6 +186,32 @@ class CommLog:
 
 _STACK: list[CommLog] = []
 
+# Observability hooks (``repro.obs``): the tracer subscribes to records
+# (to pin each ApssStats onto its enclosing span) and the metrics registry
+# to counters (so ``CommLog.counters`` and the registry never diverge —
+# one ``incr`` call feeds both). Hooks keep the dependency one-way:
+# ``repro.obs`` imports this module, never the reverse.
+_RECORD_HOOKS: list = []
+_COUNTER_HOOKS: list = []
+
+
+def add_record_hook(fn) -> None:
+    _RECORD_HOOKS.append(fn)
+
+
+def remove_record_hook(fn) -> None:
+    if fn in _RECORD_HOOKS:
+        _RECORD_HOOKS.remove(fn)
+
+
+def add_counter_hook(fn) -> None:
+    _COUNTER_HOOKS.append(fn)
+
+
+def remove_counter_hook(fn) -> None:
+    if fn in _COUNTER_HOOKS:
+        _COUNTER_HOOKS.remove(fn)
+
 
 def enabled() -> bool:
     """True iff at least one CommLog is active (instrumentation guard)."""
@@ -192,6 +226,8 @@ def record(stats: ApssStats) -> None:
     """Append ``stats`` to every active log (no-op when none is active)."""
     for log in _STACK:
         log.records.append(stats)
+    for fn in list(_RECORD_HOOKS):
+        fn(stats)
 
 
 def incr(name: str, n: int = 1) -> None:
@@ -209,6 +245,8 @@ def incr(name: str, n: int = 1) -> None:
     """
     for log in _STACK:
         log.counters[name] += n
+    for fn in list(_COUNTER_HOOKS):
+        fn(name, n)
 
 
 # ---------------------------------------------------------------------------

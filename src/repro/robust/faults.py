@@ -40,6 +40,8 @@ import time
 
 import numpy as np
 
+from repro.obs import recorder as _recorder
+
 
 class InjectedFault(RuntimeError):
     """A planned fault fired — raised only by fault-injection hooks."""
@@ -91,6 +93,12 @@ class FaultPlan:
             if self._remaining[i] > 0:
                 self._remaining[i] -= 1
             self.fired[f"{kind}:{scope}"] += 1
+            # Flight-recorder seam: a firing fault is exactly the moment a
+            # postmortem wants the recent-event buffer frozen.
+            if _recorder.enabled():
+                _recorder.trigger(
+                    f"fault:{kind}:{scope}", step=step, rank=rank,
+                )
             return f
         return None
 

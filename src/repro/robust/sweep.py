@@ -47,6 +47,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.core.apss import pad_rows
 from repro.core.matches import Matches, extract_matches, merge_matches
+from repro.obs import trace
 from repro.planner import telemetry
 
 _META = "sweep_meta.json"
@@ -233,34 +234,35 @@ class ResumableSweep:
         plan = self.fault_plan
 
         for s in range(start, self.B):
-            if plan is not None:
-                plan.kill_point(s)
-                plan.delay("sweep", step=s)
-            if self.timer is not None:
-                self.timer.start()
-            merged = _sweep_step(
-                Db, state["values"], state["indices"], state["counts"],
-                jnp.int32(s),
-                threshold=self.threshold, k=self.k, bn=self.bn, n=self.n,
-            )
-            state = {
-                "values": merged.values,
-                "indices": merged.indices,
-                "counts": merged.counts,
-            }
-            jax.block_until_ready(state["values"])
-            if self.timer is not None:
-                self.timer.stop(rank=0)
-            if plan is not None and plan.armed("corrupt", "sweep.caravan"):
-                state["values"] = jnp.asarray(
-                    plan.corrupt_array(np.asarray(state["values"]), step=s)
+            with trace.span("sweep/step", i=s):
+                if plan is not None:
+                    plan.kill_point(s)
+                    plan.delay("sweep", step=s)
+                if self.timer is not None:
+                    self.timer.start()
+                merged = _sweep_step(
+                    Db, state["values"], state["indices"], state["counts"],
+                    jnp.int32(s),
+                    threshold=self.threshold, k=self.k, bn=self.bn, n=self.n,
                 )
-            if (s + 1) % self.checkpoint_every == 0 or s + 1 == self.B:
-                self.manager.save(
-                    {kk: np.asarray(v) for kk, v in state.items()},
-                    step=s + 1,
-                )
-                telemetry.incr("sweep.checkpoints")
+                state = {
+                    "values": merged.values,
+                    "indices": merged.indices,
+                    "counts": merged.counts,
+                }
+                jax.block_until_ready(state["values"])
+                if self.timer is not None:
+                    self.timer.stop(rank=0)
+                if plan is not None and plan.armed("corrupt", "sweep.caravan"):
+                    state["values"] = jnp.asarray(
+                        plan.corrupt_array(np.asarray(state["values"]), step=s)
+                    )
+                if (s + 1) % self.checkpoint_every == 0 or s + 1 == self.B:
+                    self.manager.save(
+                        {kk: np.asarray(v) for kk, v in state.items()},
+                        step=s + 1,
+                    )
+                    telemetry.incr("sweep.checkpoints")
 
         return Matches(
             values=state["values"][: self.n],

@@ -103,6 +103,7 @@ from repro.kernels.apss_block.ops import (
     fold_rect_packets,
     pad_worklist,
 )
+from repro.obs import trace
 from repro.planner import telemetry
 from repro.serving.index import APSSIndex
 from repro.serving.query import TRACE_COUNTS, _query_mask, query_topk
@@ -550,6 +551,10 @@ class MutableAPSSIndex:
             self._state_mgr.save(self._state_dict(), self._op_seq)
 
     def _restore_and_replay(self) -> None:
+        with trace.span("mutable/replay"):
+            self._restore_and_replay_inner()
+
+    def _restore_and_replay_inner(self) -> None:
         latest = self._state_mgr.latest_step()
         state, step = self._state_mgr.restore(fallback=True)
         if state is not None:
@@ -722,15 +727,16 @@ class MutableAPSSIndex:
         raw = self._coerce_rows(rows)
         if raw.shape[0] == 0:
             return []
-        seq = self._op_seq + 1
-        self._log({"op": np.int64(1), "rows": raw}, seq)
-        self._kill(seq, "mutable.append")
-        gids = self._apply_append(raw)
-        self._op_seq = seq
-        self._kill(seq, "mutable.commit")
-        self._snapshot()
-        telemetry.incr("serving.appends")
-        return gids
+        with trace.span("mutable/append", rows=int(raw.shape[0])):
+            seq = self._op_seq + 1
+            self._log({"op": np.int64(1), "rows": raw}, seq)
+            self._kill(seq, "mutable.append")
+            gids = self._apply_append(raw)
+            self._op_seq = seq
+            self._kill(seq, "mutable.commit")
+            self._snapshot()
+            telemetry.incr("serving.appends")
+            return gids
 
     def delete(self, ids) -> int:
         """Tombstone rows by global id; repairs the graph exactly.
@@ -747,26 +753,28 @@ class MutableAPSSIndex:
                 raise KeyError(f"unknown or already-deleted id {int(g)}")
         if ids.shape[0] == 0:
             return 0
-        seq = self._op_seq + 1
-        self._log({"op": np.int64(2), "ids": ids}, seq)
-        self._kill(seq, "mutable.append")
-        self._apply_delete(ids)
-        self._op_seq = seq
-        self._kill(seq, "mutable.commit")
-        self._snapshot()
-        telemetry.incr("serving.deletes")
-        return int(ids.shape[0])
+        with trace.span("mutable/delete", rows=int(ids.shape[0])):
+            seq = self._op_seq + 1
+            self._log({"op": np.int64(2), "ids": ids}, seq)
+            self._kill(seq, "mutable.append")
+            self._apply_delete(ids)
+            self._op_seq = seq
+            self._kill(seq, "mutable.commit")
+            self._snapshot()
+            telemetry.incr("serving.deletes")
+            return int(ids.shape[0])
 
     def compact(self) -> None:
         """Rewrite live rows contiguously (order preserved) and rebuild
         stats; logged as its own op so resume replays it."""
-        seq = self._op_seq + 1
-        self._log({"op": np.int64(3)}, seq)
-        self._kill(seq, "mutable.append")
-        self._compact()
-        self._op_seq = seq
-        self._kill(seq, "mutable.commit")
-        self._snapshot()
+        with trace.span("mutable/compact"):
+            seq = self._op_seq + 1
+            self._log({"op": np.int64(3)}, seq)
+            self._kill(seq, "mutable.append")
+            self._compact()
+            self._op_seq = seq
+            self._kill(seq, "mutable.commit")
+            self._snapshot()
 
     # -- mutation internals -------------------------------------------------
 

@@ -61,6 +61,7 @@ from repro.kernels.apss_block.ops import (
     pad_worklist,
 )
 from repro.kernels.apss_block.sparse import rect_sparse_tile_candidates_pallas
+from repro.obs import metrics, trace
 from repro.planner import telemetry
 from repro.serving.index import APSSIndex
 
@@ -97,6 +98,24 @@ def query_topk(
     tile scoring through the rectangular Pallas kernels (TPU; interpret
     off-TPU); the default XLA scan is the production path off-TPU.
     """
+    with trace.span("serving/query", use_kernel=use_kernel):
+        return _query_topk_impl(
+            index, Q, threshold, k, block_q=block_q, use_kernel=use_kernel,
+            use_minsize=use_minsize, interpret=interpret,
+        )
+
+
+def _query_topk_impl(
+    index: APSSIndex,
+    Q,
+    threshold: float,
+    k: int = 32,
+    *,
+    block_q: int = 128,
+    use_kernel: bool = False,
+    use_minsize: bool = True,
+    interpret: bool | None = None,
+) -> Matches:
     if interpret is None:
         interpret = not _on_tpu()
     if isinstance(Q, SparseCorpus):
@@ -158,22 +177,28 @@ def query_topk(
         use_minsize=use_minsize, normalized=index.normalized,
     )
     wl = compact_rect_worklist(np.asarray(mask), np.asarray(ub))
-    if telemetry.enabled():
+    if telemetry.enabled() or metrics.enabled():
         mk = np.asarray(mask)
         live = 0 if wl is None else int(wl.shape[1])
         depth = (
             int(index.bdims.shape[1]) if index.is_sparse
             else int(index.corpus.shape[1])
         )
-        telemetry.record(telemetry.ApssStats(
-            variant="serving/query",
-            n=index.n, m=index.m, block_rows=index.block_rows,
-            sparse=index.is_sparse,
-            flops=2.0 * live * block_q * index.block_rows * depth,
-            live_tiles=live, total_tiles=int(mk.size),
-            tile_counts=tuple(int(x) for x in mk.sum(axis=1)),
-            extra={"batch": B, "use_kernel": use_kernel},
-        ))
+        if telemetry.enabled():
+            telemetry.record(telemetry.ApssStats(
+                variant="serving/query",
+                n=index.n, m=index.m, block_rows=index.block_rows,
+                sparse=index.is_sparse,
+                flops=2.0 * live * block_q * index.block_rows * depth,
+                live_tiles=live, total_tiles=int(mk.size),
+                tile_counts=tuple(int(x) for x in mk.sum(axis=1)),
+                extra={"batch": B, "use_kernel": use_kernel},
+            ))
+        if metrics.enabled():
+            metrics.observe(
+                "serving.live_tile_fraction", live / max(1, mk.size)
+            )
+        trace.annotate(batch=B, live_tiles=live, total_tiles=int(mk.size))
     if wl is None:
         return empty_matches(B, k)
     ij, tvalid = pad_worklist(wl)

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.apss import normalize_rows
+from repro.obs import metrics, recorder, trace
 from repro.planner import telemetry
 from repro.serving.index import APSSIndex
 from repro.serving.mutable import MutableAPSSIndex
@@ -144,9 +145,10 @@ class RetrievalServer:
         self._cache: collections.OrderedDict[
             str, tuple[RetrievalResult, float, int]
         ] = collections.OrderedDict()
-        # pending entries: (rid, query, cache_key, absolute deadline | inf)
+        # pending entries: (rid, query, cache_key, absolute deadline | inf,
+        # submit time — the request-latency clock start)
         self._pending: collections.deque[
-            tuple[int, np.ndarray, str, float]
+            tuple[int, np.ndarray, str, float, float]
         ] = collections.deque()
         self._results: dict[int, RetrievalResult] = {}
         self._next_id = 0
@@ -196,6 +198,7 @@ class RetrievalServer:
     def _shed_request(self, rid: int) -> None:
         self._shed += 1
         telemetry.incr("serving.shed")
+        trace.event("shed", rid=rid)
         self._results[rid] = self._empty_result("shed")
 
     # -- request lifecycle --------------------------------------------------
@@ -211,18 +214,25 @@ class RetrievalServer:
         rid = self._next_id
         self._next_id += 1
         self._requests += 1
+        telemetry.incr("serving.requests")
         key = self._cache_key(q)
         hit = self._cache_get(key)
         if hit is not None:
             self._cache_hits += 1
+            telemetry.incr("serving.cache_hits")
+            trace.event("cache_hit", rid=rid)
+            if metrics.enabled():
+                metrics.observe("serving.latency_s", 0.0)
             self._results[rid] = hit._replace(cached=True)
             return rid
         if self.max_pending is not None and len(self._pending) >= self.max_pending:
             self._shed_request(rid)
             return rid
+        trace.event("admit", rid=rid)
         budget = deadline_s if deadline_s is not None else self.deadline_s
-        deadline = time.monotonic() + budget if budget is not None else np.inf
-        self._pending.append((rid, q, key, deadline))
+        now = time.monotonic()
+        deadline = now + budget if budget is not None else np.inf
+        self._pending.append((rid, q, key, deadline, now))
         return rid
 
     # -- tiered scoring ------------------------------------------------------
@@ -259,15 +269,20 @@ class RetrievalServer:
                     if nth > 0:
                         self._degraded += 1
                         telemetry.incr("serving.degraded")
+                        trace.event("degrade", tier=tier)
+                        recorder.trigger("serving.tier_down", tier=tier)
                     return m, tier
                 except Exception:
                     if attempt < self.max_retries:
                         self._retries += 1
                         telemetry.incr("serving.retries")
+                        trace.event("retry", tier=tier, attempt=attempt + 1)
                         time.sleep(delay)
                         delay *= 2
         self._degraded += 1
         telemetry.incr("serving.degraded")
+        trace.event("degrade", tier="stale")
+        recorder.trigger("serving.tier_down", tier="stale")
         return None, "stale"
 
     def step(self) -> int:
@@ -280,6 +295,10 @@ class RetrievalServer:
         """
         if not self._pending:
             return 0
+        with trace.span("serving/step", step=self._steps):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
         if self.fault_plan is not None:
             # Chaos seam: an armed delay here models a slow shard/step.
             self.fault_plan.delay("serving", step=self._steps)
@@ -287,12 +306,12 @@ class RetrievalServer:
         shed_count = 0
         keep: collections.deque = collections.deque()
         while self._pending:
-            rid, q, key, deadline = self._pending.popleft()
+            rid, q, key, deadline, born = self._pending.popleft()
             if deadline < now:
                 self._shed_request(rid)
                 shed_count += 1
             else:
-                keep.append((rid, q, key, deadline))
+                keep.append((rid, q, key, deadline, born))
         self._pending = keep
         if not self._pending:
             return shed_count
@@ -300,32 +319,48 @@ class RetrievalServer:
             self._pending.popleft()
             for _ in range(min(self.max_batch, len(self._pending)))
         ]
+        trace.event("batch", size=len(batch), queued=len(self._pending))
+        if metrics.enabled():
+            metrics.observe(
+                "serving.batch_occupancy", len(batch) / self.max_batch
+            )
         Q = np.zeros((self.max_batch, self.index.m), np.float32)
-        for slot, (_, q, _, _) in enumerate(batch):
+        for slot, (_, q, _, _, _) in enumerate(batch):
             Q[slot] = q
         Qj = jnp.asarray(Q)
         if self.normalize:
             Qj = normalize_rows(Qj)
-        m, tier = self._score_batch(Qj)
+        with trace.span("serving/score", batch=len(batch)):
+            m, tier = self._score_batch(Qj)
+            trace.annotate(tier=tier)
         self._steps += 1
+
+        def latch(rid: int, born: float, res: RetrievalResult) -> None:
+            self._results[rid] = res
+            if metrics.enabled():
+                metrics.observe(
+                    "serving.latency_s", time.monotonic() - born
+                )
+
         if m is None:
             # Every scoring tier is down: stale cache answers beat no
             # answers; true misses fail explicitly.
-            for rid, _, key, _ in batch:
+            for rid, _, key, _, born in batch:
                 stale = self._cache_get(key, stale_ok=True)
                 if stale is not None:
                     self._stale += 1
                     telemetry.incr("serving.stale")
-                    self._results[rid] = stale._replace(
+                    latch(rid, born, stale._replace(
                         cached=True, status="stale"
-                    )
+                    ))
                 else:
-                    self._results[rid] = self._empty_result("failed")
+                    latch(rid, born, self._empty_result("failed"))
             return len(batch) + shed_count
         values = np.asarray(m.values)
         indices = np.asarray(m.indices)
         counts = np.asarray(m.counts)
-        for slot, (rid, _, key, _) in enumerate(batch):
+        trace.event("merge", batch=len(batch))
+        for slot, (rid, _, key, _, born) in enumerate(batch):
             # Per-request copies, frozen: the cache and every client hold
             # the same arrays, so in-place mutation by one caller would
             # otherwise corrupt later cache hits — make it raise instead.
@@ -336,7 +371,7 @@ class RetrievalServer:
             res = RetrievalResult(
                 values=v, indices=i, count=int(counts[slot]), cached=False
             )
-            self._results[rid] = res
+            latch(rid, born, res)
             self._cache_put(key, res)
         return len(batch) + shed_count
 

@@ -50,7 +50,9 @@ def _valid_doc():
             "amortized_speedup_batch64": 3.0,
             "batches": {
                 b: {"us_per_call": 1, "us_per_query": 1, "qps": 1,
-                    "total_matches": 1}
+                    "total_matches": 1,
+                    "latency_us": {"p50": 900.0, "p95": 1200.0,
+                                   "p99": 1500.0, "samples": 20}}
                 for b in ("1", "8", "64")
             },
         },
@@ -88,6 +90,8 @@ def test_valid_doc_passes():
 @pytest.mark.parametrize("path", [
     ("sparse_sweep",),
     ("serving", "batches", "64"),
+    ("serving", "batches", "8", "latency_us"),
+    ("serving", "batches", "1", "latency_us", "p99"),
     ("planner", "profile", "gather_gflops"),
     ("planner", "mesh2d"),
     ("planner", "corpora", "sparse_lowdens", "entries", 0, "measured_us"),
@@ -101,6 +105,19 @@ def test_missing_key_fails_with_path(path):
         node = node[k]
     del node[path[-1]]
     with pytest.raises(SchemaError):
+        check(doc)
+
+
+def test_serving_latency_histogram_lane():
+    """The serving lane must carry a per-call latency distribution with
+    ordered quantiles — a mean alone can't regress on tail latency."""
+    doc = _valid_doc()
+    doc["serving"]["batches"]["64"]["latency_us"]["p50"] = 2000.0  # > p99
+    with pytest.raises(SchemaError, match=r"p50 .* exceeds p99"):
+        check(doc)
+    doc = _valid_doc()
+    doc["serving"]["batches"]["8"]["latency_us"]["p50"] = 0.0
+    with pytest.raises(SchemaError, match="p50 must be positive"):
         check(doc)
 
 
@@ -275,3 +292,6 @@ def test_ci_workflow_wires_the_gate():
     assert "upload-artifact" in wf
     assert "ruff check" in wf and "ruff format --check" in wf
     assert "python - <<" not in wf  # the heredoc is gone for good
+    # observability artifacts: the bench/chaos lanes emit a Chrome trace +
+    # metrics snapshot and upload them per matrix cell
+    assert "--trace-out" in wf and "--metrics-out" in wf

@@ -1,0 +1,441 @@
+"""Observability layer tests (ISSUE 8): span-tree shape, histogram
+accuracy, Chrome-trace validity, flight-recorder triggers, cost-model
+drift detection, and — load-bearing for everything else — the overhead
+guard: with no active sink the instrumented hot paths allocate nothing,
+plant no callbacks, and add zero device work.
+"""
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apss import normalize_rows
+from repro.obs import (
+    FlightRecorder,
+    MetricsRegistry,
+    Tracer,
+    drift,
+    export,
+    metrics,
+    recorder,
+    trace,
+)
+from repro.obs.metrics import Histogram
+from repro.planner import telemetry
+from repro.planner.costmodel import CalibrationProfile
+from repro.planner.telemetry import ApssStats, CollectiveHop
+
+T, K = 0.35, 16
+
+
+def _dense(n=128, m=96, dens=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    D = np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    D *= rng.random((n, m)) < dens
+    return np.asarray(normalize_rows(jnp.asarray(D)))
+
+
+# -- span tree ----------------------------------------------------------------
+
+
+def test_span_tree_nesting_shape():
+    with Tracer() as tr:
+        with trace.span("plan", autotune=False):
+            with trace.span("inner", i=0):
+                trace.event("mark", x=1)
+            with trace.span("inner", i=1):
+                pass
+        with trace.span("execute"):
+            trace.annotate(config="blocked")
+    names = [s.name for s in tr.walk()]
+    assert names == ["trace", "plan", "inner", "inner", "execute"]
+    plan, execute = tr.root.children
+    assert [c.attrs["i"] for c in plan.children] == [0, 1]
+    assert plan.children[0].events[0][1] == "mark"
+    assert execute.attrs["config"] == "blocked"
+    # every span closed, times monotonic within a parent
+    for s in tr.walk():
+        assert s.t1 is not None and s.t1 >= s.t0
+    assert plan.t1 <= execute.t0
+
+
+def test_span_tree_survives_exceptions():
+    """A raising body closes its span with status="error"; a child whose
+    __exit__ was skipped by the unwind is closed by its ancestor."""
+    with Tracer() as tr:
+        with pytest.raises(ValueError):
+            with trace.span("outer"):
+                with trace.span("inner"):
+                    raise ValueError("boom")
+        with trace.span("after"):
+            pass
+    outer, after = tr.root.children
+    assert outer.status == "error" and "boom" in outer.error
+    (inner,) = outer.children
+    assert inner.t1 is not None  # closed despite the unwind
+    assert after.parent is tr.root  # stack recovered, not nested under outer
+
+
+def test_tracer_enters_private_commlog():
+    """Tracing alone turns on the telemetry seam (records + tickers)."""
+    assert not telemetry.enabled()
+    with Tracer() as tr:
+        assert telemetry.enabled()
+        with trace.span("call"):
+            telemetry.record(ApssStats(variant="blocked/fused", n=8, m=8))
+    assert not telemetry.enabled()
+    (call,) = tr.root.children
+    assert [r.variant for r in call.records] == ["blocked/fused"]
+
+
+# -- overhead guard -----------------------------------------------------------
+
+
+def test_disabled_span_is_shared_noop_singleton():
+    assert not trace.enabled()
+    assert trace.span("a") is trace.span("b", x=1) is trace.NULL_SPAN
+    with trace.span("a") as s:
+        assert s is None
+    trace.event("nothing", x=1)  # must not raise
+    trace.annotate(y=2)
+    metrics.observe("serving.latency_s", 0.1)  # no registry: dropped
+    recorder.trigger("no-op")
+
+
+def test_no_sinks_means_no_new_traces_and_no_callbacks():
+    """The instrumented serving hot path adds zero device work when no
+    sink is active: a repeat query re-traces nothing (TRACE_COUNTS), and
+    the jaxpr of the instrumented sweep carries a debug_callback ONLY
+    when telemetry is on (the StepTicker seam)."""
+    from repro.core.distributed import apss_2d
+    from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.serving import build_index, query_topk
+    from repro.serving.query import TRACE_COUNTS
+
+    sp = sparse_clustered_corpus(256, 128, 8.0, n_clusters=4, seed=0)
+    index = build_index(sp, block_rows=64, normalize=False)
+    Q = perturbed_queries(sp, 4, seed=1)
+    jax.block_until_ready(query_topk(index, Q, T, K).values)
+    before = dict(TRACE_COUNTS)
+    jax.block_until_ready(query_topk(index, Q, T, K).values)
+    assert dict(TRACE_COUNTS) == before  # zero new traces without sinks
+
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    D = jnp.asarray(_dense(64, 96, seed=3))
+
+    # fresh callable per trace: jax's tracing cache would otherwise skip
+    # re-running the Python body (the documented telemetry caveat)
+    def fresh():
+        return lambda d: apss_2d(d, T, K, mesh, block_rows=16).values
+
+    off = str(jax.make_jaxpr(fresh())(D))
+    assert "debug_callback" not in off  # no ticker planted when disabled
+    with telemetry.CommLog():
+        on = str(jax.make_jaxpr(fresh())(D))
+    assert "debug_callback" in on  # the seam exists when enabled
+
+
+# -- histogram ----------------------------------------------------------------
+
+
+def test_histogram_quantiles_track_numpy():
+    rng = np.random.default_rng(42)
+    samples = rng.lognormal(mean=0.0, sigma=1.0, size=5000)
+    h = Histogram()
+    for v in samples:
+        h.observe(float(v))
+    for q in (0.5, 0.9, 0.95, 0.99):
+        want = float(np.quantile(samples, q))
+        got = h.quantile(q)
+        # exponential buckets are ~19% wide; midpoint reads stay well
+        # inside 15% relative error
+        assert abs(got - want) / want < 0.15, (q, got, want)
+    snap = h.snapshot()
+    assert snap["count"] == 5000
+    assert snap["min"] == pytest.approx(samples.min())
+    assert snap["max"] == pytest.approx(samples.max())
+    assert snap["mean"] == pytest.approx(samples.mean())
+
+
+def test_histogram_edge_cases():
+    h = Histogram()
+    assert math.isnan(h.quantile(0.5))
+    h.observe(0.0)   # zero bucket
+    h.observe(-1.0)  # clamped into zero bucket too
+    h.observe(2.0)
+    assert h.count == 3 and h.zeros == 2
+    assert h.quantile(0.0) == 0.0  # zeros dominate the low quantiles
+    # top quantile reads the bucket's geometric midpoint — within one
+    # bucket width (~19%) of the observed max
+    assert h.quantile(1.0) == pytest.approx(2.0, rel=0.19)
+
+
+def test_registry_absorbs_telemetry_counters_and_derives_hit_rate():
+    with MetricsRegistry() as reg:
+        telemetry.incr("serving.requests", 4)
+        telemetry.incr("serving.cache_hits")
+        metrics.observe("serving.latency_s", 0.010)
+        metrics.gauge("queue.depth", 3)
+    snap = reg.snapshot()
+    assert snap["counters"]["serving.requests"] == 4
+    assert snap["derived"]["serving.cache_hit_rate"] == 0.25
+    assert snap["gauges"]["queue.depth"] == 3
+    assert snap["histograms"]["serving.latency_s"]["count"] == 1
+    prom = reg.to_prometheus()
+    assert "repro_serving_requests_total 4" in prom
+    assert 'repro_serving_latency_s{quantile="0.99"}' in prom
+
+
+# -- chrome trace export ------------------------------------------------------
+
+
+def test_chrome_trace_is_valid_and_monotonic(tmp_path):
+    with Tracer() as tr:
+        with trace.span("plan"):
+            with trace.span("plan/inner"):
+                trace.event("mark")
+        with trace.span("serving/step", step=0):
+            pass
+    with MetricsRegistry() as reg:
+        reg.incr("x")
+    path = tmp_path / "trace.json"
+    doc = export.write_chrome_trace(str(path), tr, reg)
+    assert json.loads(path.read_text()) == doc  # valid JSON round-trip
+    events = doc["traceEvents"]
+    assert events, "no events emitted"
+    for e in events:
+        assert {"name", "ph", "pid", "tid"} <= e.keys()
+        if e["ph"] in ("X", "i"):
+            assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+    ts = [e["ts"] for e in events if e["ph"] in ("X", "i")]
+    assert ts == sorted(ts)  # monotonic event stream
+    # one metadata track per top-level phase, names preserved
+    names = {e["args"]["name"] for e in events if e["ph"] == "M"}
+    assert names == {"plan", "serving"}
+    assert doc["otherData"]["metrics"]["counters"]["x"] == 1
+
+
+def test_write_metrics_formats(tmp_path):
+    with MetricsRegistry() as reg:
+        reg.incr("a.b", 2)
+    jpath = tmp_path / "m.json"
+    export.write_metrics(str(jpath), reg)
+    assert json.loads(jpath.read_text())["counters"]["a.b"] == 2
+    ppath = tmp_path / "m.prom"
+    export.write_metrics(str(ppath), reg)
+    assert "repro_a_b_total 2" in ppath.read_text()
+
+
+# -- ring-step materialization (integration) ---------------------------------
+
+
+def test_trace_materializes_ring_steps_matching_ticker(mesh4x2):
+    """plan->execute is not required — any traced checkerboard run emits an
+    ApssStats with a StepTicker, and finalize() turns its ticks into
+    ring_step child spans whose count and extent match the ticker."""
+    from repro.core.distributed import apss_2d
+
+    D = jnp.asarray(_dense(128, 96, seed=11))
+    q = mesh4x2.shape["data"]
+    # registry entered FIRST so it outlives the tracer: finalize() (tracer
+    # exit) observes the step-time/skew histograms into any live registry
+    with MetricsRegistry() as reg, Tracer() as tr:
+        with trace.span("apss_2d"):
+            m = apss_2d(D, T, K, mesh4x2, block_rows=16)
+            jax.block_until_ready(m.values)
+    (sp,) = tr.root.children
+    (rec,) = sp.records
+    steps = [c for c in sp.children if c.name == "ring_step"]
+    assert len(steps) == q
+    assert [c.attrs["i"] for c in steps] == list(range(q))
+    assert all(c.attrs["variant"] == rec.variant for c in steps)
+    # span extents reproduce the ticker's per-step deltas exactly
+    want = rec.step_ticker.step_times()
+    got = [c.duration_s for c in steps]
+    assert got == pytest.approx(want, rel=1e-6)
+    assert all(c.attrs["ranks"] == 8 for c in steps)
+    # and the step-time/skew histograms were observed into the registry
+    assert reg.histograms["sweep.step_time_s"].count == q
+    assert reg.histograms["sweep.step_skew_s"].count == q
+
+
+# -- flight recorder ----------------------------------------------------------
+
+
+def test_flight_recorder_dumps_on_injected_fault(tmp_path):
+    from repro.robust import Fault, FaultPlan
+    from repro.robust.faults import SweepKilled
+    from repro.robust.sweep import ResumableSweep
+
+    D = _dense(64, 32, seed=5)
+    plan = FaultPlan([Fault("kill", scope="sweep", step=1)])
+    with FlightRecorder(directory=str(tmp_path / "fr")) as fr, Tracer():
+        sweep = ResumableSweep(
+            D, threshold=T, k=8, block_rows=16,
+            directory=str(tmp_path / "ckpt"), fault_plan=plan,
+        )
+        with pytest.raises(SweepKilled):
+            sweep.run()
+    assert plan.fired["kill:sweep"] == 1  # the fault actually triggered
+    (reason, payload, path) = fr.dumps[0]
+    assert reason == "fault:kill:sweep"
+    assert payload["attrs"]["step"] == 1
+    # the lead-up survived: step-0 spans are in the frozen buffer
+    assert any(e["kind"] == "span" for e in payload["events"])
+    dumped = json.loads(open(path).read())
+    assert dumped["reason"] == "fault:kill:sweep"
+
+
+def test_flight_recorder_ring_buffer_bounded():
+    with FlightRecorder(capacity=4) as fr:
+        for i in range(10):
+            recorder.note("event", f"e{i}")
+        payload = fr.trigger("overflow-check")
+    assert len(payload["events"]) == 4
+    assert payload["events"][0]["name"] == "e6"  # oldest dropped first
+
+
+def test_recorder_triggers_on_checkpoint_corruption_fallback(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.robust import FaultPlan
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = {"x": np.arange(8, dtype=np.float32)}
+    mgr.save(state, step=1)
+    mgr.save({"x": state["x"] + 1}, step=2)
+    # flip a byte in the newest checkpoint's leaf
+    leaf = tmp_path / "step_0000000002" / "x.npy"
+    FaultPlan(seed=3).corrupt_file(str(leaf))
+    with FlightRecorder() as fr:
+        restored, step = mgr.restore(like=state, fallback=True)
+    assert step == 1
+    assert [r for r, _, _ in fr.dumps] == ["checkpoint.corruption_fallback"]
+
+
+# -- drift --------------------------------------------------------------------
+
+
+def _stats(variant="blocked/fused", flops=4e9, wire=0, hops=0):
+    hop = (
+        (CollectiveHop(op="ppermute", payload="dense_block", axis="data",
+                       bytes_per_hop=wire // max(hops, 1), hops=hops),)
+        if hops else ()
+    )
+    return ApssStats(variant=variant, n=1024, m=1024, flops=flops, hops=hop)
+
+
+def test_predict_seconds_matches_profile_arithmetic():
+    prof = CalibrationProfile(matmul_gflops=40.0, overhead_us=0.0)
+    s = _stats(flops=40e9)  # exactly one second of matmul at 40 GF/s
+    assert drift.predict_seconds(s, prof) == pytest.approx(1.0)
+    # overlapped schedules take max(compute, comm), sequential ones add
+    ring = _stats(variant="horizontal/ring", flops=40e9, wire=4_000_000_000,
+                  hops=4)
+    seq = _stats(variant="vertical/allreduce", flops=40e9,
+                 wire=4_000_000_000, hops=4)
+    p_ring = drift.predict_seconds(ring, prof)
+    p_seq = drift.predict_seconds(seq, prof)
+    assert p_seq > p_ring  # comm hidden under compute for the ring family
+
+
+def test_drift_report_flags_perturbed_profile():
+    """A profile whose throughput constant rotted by 100x yields residual
+    ratios ~100x and a STALE verdict naming the recalibration entry point;
+    the honest profile stays fresh on the same measurements."""
+    fresh_prof = CalibrationProfile(matmul_gflops=40.0, overhead_us=0.0)
+    records = [_stats(flops=f) for f in (10e9, 20e9, 40e9)]
+    measured = [f / 40e9 for f in (10e9, 20e9, 40e9)]  # truth at 40 GF/s
+    residuals = [
+        drift.Residual(
+            variant=r.variant,
+            predicted_s=drift.predict_seconds(r, fresh_prof),
+            measured_s=m,
+        )
+        for r, m in zip(records, measured)
+    ]
+    rep = drift.drift_report(residuals, profile=fresh_prof)
+    assert not rep.stale
+    assert rep.median_ratio == pytest.approx(1.0)
+
+    stale_prof = CalibrationProfile(matmul_gflops=4000.0, overhead_us=0.0)
+    residuals = [
+        drift.Residual(
+            variant=r.variant,
+            predicted_s=drift.predict_seconds(r, stale_prof),
+            measured_s=m,
+        )
+        for r, m in zip(records, measured)
+    ]
+    rep = drift.drift_report(residuals, profile=stale_prof)
+    assert rep.stale
+    assert rep.median_ratio == pytest.approx(100.0)
+    assert rep.per_variant["blocked/fused"] == pytest.approx(100.0)
+    assert "calibrate" in rep.recommendation
+    assert "blocked/fused" in rep.recommendation
+    d = rep.as_dict()
+    assert d["stale"] and d["n_residuals"] == 3
+    assert "STALE" in rep.describe()
+
+
+def test_residuals_from_trace_joins_records_to_spans():
+    clock = iter(np.arange(0.0, 100.0, 0.5))
+    with Tracer(clock=lambda: float(next(clock))) as tr:
+        with trace.span("execute"):
+            telemetry.record(_stats(flops=40e9))
+    prof = CalibrationProfile(matmul_gflops=40.0, overhead_us=0.0)
+    (res,) = drift.residuals_from_trace(tr, prof)
+    assert res.variant == "blocked/fused"
+    assert res.predicted_s == pytest.approx(1.0)
+    assert res.measured_s == pytest.approx(0.5)  # one clock step in-span
+    assert res.source == "trace"
+
+
+def test_residuals_from_estimates_skip_unmeasured():
+    from repro.planner.plan import plan_apss
+
+    sp = _dense(64, 64, seed=9)
+    plan = plan_apss(sp, T, K, None, include_kernel=False)
+    assert drift.residuals_from_estimates(plan.estimates) == []
+    plan.estimates[0].measured_s = plan.estimates[0].total_s * 2
+    (res,) = drift.residuals_from_estimates(plan.estimates)
+    assert res.ratio == pytest.approx(2.0)
+    assert res.source == "estimate"
+
+
+# -- telemetry LIFO regression (satellite 1) ----------------------------------
+
+
+def test_commlog_exit_is_lifo_not_remove_first():
+    """Regression: __exit__ used _STACK.remove(self), which strips the
+    FIRST occurrence — re-entering the same log nested (legal: each entry
+    just means "receive records") corrupted the stack order and detached
+    the still-active inner entry."""
+    log = telemetry.CommLog()
+    with log:
+        with log:  # nested re-entry of the SAME log
+            assert telemetry.enabled()
+        # inner exit must pop the inner entry, leaving the outer active
+        assert telemetry.enabled()
+        telemetry.record(ApssStats(variant="x", n=1, m=1))
+        assert log.records  # outer entry still receiving
+    assert not telemetry.enabled()
+
+
+def test_commlog_out_of_order_exit_raises():
+    a, b = telemetry.CommLog(), telemetry.CommLog()
+    a.__enter__()
+    b.__enter__()
+    with pytest.raises(RuntimeError, match="LIFO"):
+        a.__exit__(None, None, None)
+    # cleanup: unwind in the legal order
+    b.__exit__(None, None, None)
+    a.__exit__(None, None, None)
+    assert not telemetry.enabled()
