@@ -3,7 +3,9 @@
 Previously an inline heredoc in ``.github/workflows/ci.yml``; now a real
 module so the gate is unit-testable (``tests/test_ci_infra.py``), versioned
 next to the benchmarks that produce the artifact, and extended alongside
-every new benchmark family (latest: the 2-D-sparse planner lane).
+every new benchmark family (latest: provenance + the optional model-vs-HLO
+audit lane, plus the ``BENCH_history.jsonl`` record shape the sentinel
+appends).
 
     PYTHONPATH=src python -m benchmarks.check_schema /tmp/bench_smoke.json
 
@@ -184,6 +186,68 @@ def check_mutable(doc: dict) -> None:
     )
 
 
+def check_provenance(doc: dict) -> None:
+    """The sentinel's join key: every artifact must say who produced it."""
+    _require_keys(doc, {"provenance"}, "$")
+    p = doc["provenance"]
+    _require_keys(
+        p,
+        {"git_sha", "timestamp", "device_kind", "jax_version"},
+        "$.provenance",
+    )
+    for key in ("git_sha", "timestamp", "device_kind", "jax_version"):
+        _require(
+            isinstance(p[key], str) and p[key], f"$.provenance.{key}",
+            "must be a non-empty string",
+        )
+
+
+def check_audit(doc: dict) -> None:
+    """The model-vs-HLO audit lane (optional — present when the artifact
+    was produced with ``--audit``): every entry carries both sides of
+    each ratio plus its compile record, and the dense FLOP gate holds."""
+    if "audit" not in doc:
+        return
+    a = doc["audit"]
+    _require_keys(a, {"entries", "gated_ok", "gated_families"}, "$.audit")
+    _require(a["entries"], "$.audit.entries", "empty audit")
+    for i, e in enumerate(a["entries"]):
+        where = f"$.audit.entries[{i}]"
+        _require_keys(
+            e,
+            {"family", "predicted_flops", "hlo_flops", "flop_ratio",
+             "predicted_link_bytes", "hlo_link_bytes",
+             "predicted_hbm_bytes", "hlo_hbm_bytes", "compile"},
+            where,
+        )
+        _require_keys(
+            e["compile"], {"t_compile_s", "total_bytes"}, where + ".compile"
+        )
+    families = {e["family"] for e in a["entries"]}
+    missing = set(a["gated_families"]) - families
+    _require(not missing, "$.audit", f"gated families missing: {sorted(missing)}")
+    _require(
+        a["gated_ok"], "$.audit",
+        "dense FLOP ratio gate failed (model vs HLO drift)",
+    )
+
+
+def check_history_record(rec: dict) -> None:
+    """One BENCH_history.jsonl line (``benchmarks.sentinel`` record)."""
+    _require_keys(
+        rec, {"git_sha", "timestamp", "device_kind", "jax_version", "metrics"},
+        "$history",
+    )
+    _require(isinstance(rec["metrics"], dict), "$history.metrics",
+             "must be an object")
+    _require(rec["metrics"], "$history.metrics", "empty metric dict")
+    for name, v in rec["metrics"].items():
+        _require(
+            isinstance(v, (int, float)) and v >= 0,
+            f"$history.metrics[{name}]", "must be a non-negative number",
+        )
+
+
 def check(doc: dict) -> None:
     """Validate one BENCH artifact; raises :class:`SchemaError` on the first
     violation."""
@@ -191,6 +255,8 @@ def check(doc: dict) -> None:
     check_serving(doc)
     check_planner(doc)
     check_mutable(doc)
+    check_provenance(doc)
+    check_audit(doc)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -205,7 +271,8 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     print(
         f"BENCH schema OK ({path}): sweep + serving + planner "
-        "(incl. 2-D lane) + mutable"
+        "(incl. 2-D lane) + mutable + provenance"
+        + (" + audit" if "audit" in doc else "")
     )
     return 0
 

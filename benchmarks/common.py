@@ -35,3 +35,31 @@ def bench_corpus(n: int = 1024, m: int = 768, density: float = 0.05, seed: int =
 
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def provenance() -> dict:
+    """Who/where/when a bench artifact was produced — the join key the
+    regression sentinel (``benchmarks.sentinel``) uses to line history
+    records up against baselines. Best-effort: fields degrade to
+    ``"unknown"`` outside a git checkout or on exotic backends."""
+    import datetime
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    try:
+        device_kind = jax.devices()[0].device_kind
+    except Exception:
+        device_kind = "unknown"
+    return {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "device_kind": device_kind,
+        "device_count": len(jax.devices()),
+        "jax_version": jax.__version__,
+    }

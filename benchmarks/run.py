@@ -39,6 +39,9 @@ def main() -> None:
                     help="corpus rows for the --json sparse density sweep")
     ap.add_argument("--sweep-m", type=int, default=8192,
                     help="corpus dims for the --json sparse density sweep")
+    ap.add_argument("--audit", action="store_true",
+                    help="with --json: append the model-vs-HLO compile "
+                         "audit lane (repro.obs.audit) to the artifact")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -57,7 +60,10 @@ def main() -> None:
                 json.dump(r, f, indent=2)
                 f.write("\n")
 
+        from benchmarks.common import provenance
+
         r = bench_apss_stream.measure(n=args.n)
+        r["provenance"] = provenance()
         persist(r)  # minutes of streaming data survive a sweep failure
         for name, v in r["variants"].items():
             print(f"{name}: {v['us_per_call']:.0f} us")
@@ -75,6 +81,12 @@ def main() -> None:
                 for k, v in e["variants"].items()
             }
             print(f"density={e['density']:.4f}: {times}")
+        if args.audit:
+            from repro.obs.audit import run_audit
+
+            report = run_audit()
+            r["audit"] = report.as_dict()
+            print(report.describe())
         persist(r)
         print(f"-> {args.json}")
         return

@@ -1,0 +1,225 @@
+"""Perf-regression sentinel: bench history + noise-aware regression gate.
+
+The per-PR artifact (``BENCH_apss.json``) is a snapshot; a regression is a
+statement about a *sequence* of snapshots. This module keeps that sequence
+in ``BENCH_history.jsonl`` — one provenance-keyed record per bench run
+(git sha, timestamp, device kind, jax version, flat metric dict) — and
+gates the current run against a **rolling-median baseline** of the last
+``window`` records:
+
+- ``record``: extract the stable scalar metrics from an artifact and
+  append one JSONL line (idempotent per sha: re-recording the same git
+  sha replaces the previous record rather than double-counting it in its
+  own baseline);
+- ``check``: flag any metric whose current value exceeds
+  ``tolerance ×`` the rolling median of prior records. The median (not
+  the last run) is the baseline precisely because single CI runs are
+  noisy — one slow machine poisons a last-run baseline but moves a
+  5-run median by nothing. With fewer than ``min_records`` prior
+  records the check PASSES (no baseline yet, nothing to regress from).
+
+Only same-device-kind records are compared: a history that mixes CPU and
+TPU runs must not gate one against the other.
+
+CLI (wired into CI after the bench smokes)::
+
+    python -m benchmarks.sentinel record --artifact BENCH_apss.json
+    python -m benchmarks.sentinel check  --artifact BENCH_apss.json
+
+``check`` exits 1 on regression and prints the offending metrics with
+their baselines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+DEFAULT_HISTORY = "BENCH_history.jsonl"
+DEFAULT_WINDOW = 5
+DEFAULT_TOLERANCE = 1.5
+DEFAULT_MIN_RECORDS = 1
+
+
+def extract_metrics(doc: dict) -> dict:
+    """Flatten the stable lower-is-better scalars out of a bench artifact.
+
+    Keys are dotted paths; every value is a float in the lane's native
+    unit (µs for timing lanes, seconds for the mutable delta lane). Lanes
+    absent from the artifact are simply skipped — partial artifacts
+    (``--only``-style runs) still record what they measured.
+    """
+    out: dict[str, float] = {}
+    for name, v in (doc.get("variants") or {}).items():
+        if isinstance(v, dict) and "us_per_call" in v:
+            out[f"variants.{name}.us_per_call"] = float(v["us_per_call"])
+    sweep = doc.get("sparse_sweep") or {}
+    for e in sweep.get("entries", ()):
+        d = e.get("density_requested", e.get("density"))
+        tag = f"sparse_sweep.d={d}"
+        for name, v in (e.get("variants") or {}).items():
+            if isinstance(v, dict) and "us_per_call" in v:
+                out[f"{tag}.{name}.us_per_call"] = float(v["us_per_call"])
+    serving = doc.get("serving") or {}
+    if "index_build_us" in serving:
+        out["serving.index_build_us"] = float(serving["index_build_us"])
+    for b, v in (serving.get("batches") or {}).items():
+        if isinstance(v, dict) and "us_per_query" in v:
+            out[f"serving.batch={b}.us_per_query"] = float(v["us_per_query"])
+    mutable = doc.get("mutable") or {}
+    for e in mutable.get("deltas", ()):
+        if "append_s" in e:
+            out[f"mutable.delta={e.get('delta')}.append_s"] = float(
+                e["append_s"]
+            )
+    return out
+
+
+def _history_record(doc: dict) -> dict:
+    prov = doc.get("provenance") or {}
+    return {
+        "git_sha": prov.get("git_sha", "unknown"),
+        "timestamp": prov.get("timestamp", "unknown"),
+        "device_kind": prov.get("device_kind", "unknown"),
+        "jax_version": prov.get("jax_version", "unknown"),
+        "metrics": extract_metrics(doc),
+    }
+
+
+def load_history(path: str) -> list:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def _write_history(path: str, records: list) -> None:
+    with open(path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r, sort_keys=True) + "\n")
+
+
+def record(doc: dict, history_path: str = DEFAULT_HISTORY) -> dict:
+    """Append this artifact's record to the history (replacing any prior
+    record with the same git sha — a re-run supersedes, never inflates
+    its own baseline). Returns the appended record."""
+    rec = _history_record(doc)
+    history = load_history(history_path)
+    history = [r for r in history if r.get("git_sha") != rec["git_sha"]]
+    history.append(rec)
+    _write_history(history_path, history)
+    return rec
+
+
+def check(
+    doc: dict,
+    history_path: str = DEFAULT_HISTORY,
+    *,
+    window: int = DEFAULT_WINDOW,
+    tolerance: float = DEFAULT_TOLERANCE,
+    min_records: int = DEFAULT_MIN_RECORDS,
+) -> dict:
+    """Gate ``doc`` against the rolling-median baseline (module doc).
+
+    Returns ``{"ok", "checked", "skipped", "baseline_records",
+    "regressions": [{metric, current, baseline, ratio}, ...]}``. The
+    current run's own history record (matched by git sha) is excluded
+    from its baseline.
+    """
+    rec = _history_record(doc)
+    current = rec["metrics"]
+    prior = [
+        r for r in load_history(history_path)
+        if r.get("git_sha") != rec["git_sha"]
+        and r.get("device_kind") == rec["device_kind"]
+    ][-window:]
+    if len(prior) < min_records:
+        return {
+            "ok": True, "checked": 0, "skipped": len(current),
+            "baseline_records": len(prior), "regressions": [],
+        }
+    regressions = []
+    checked = skipped = 0
+    for metric, value in sorted(current.items()):
+        samples = [
+            r["metrics"][metric] for r in prior if metric in r["metrics"]
+        ]
+        if not samples:
+            skipped += 1
+            continue
+        checked += 1
+        baseline = statistics.median(samples)
+        if baseline > 0 and value > tolerance * baseline:
+            regressions.append({
+                "metric": metric,
+                "current": value,
+                "baseline": baseline,
+                "ratio": value / baseline,
+            })
+    return {
+        "ok": not regressions,
+        "checked": checked,
+        "skipped": skipped,
+        "baseline_records": len(prior),
+        "regressions": regressions,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="bench history recorder + perf-regression gate"
+    )
+    ap.add_argument("command", choices=("record", "check"))
+    ap.add_argument("--artifact", default="BENCH_apss.json")
+    ap.add_argument("--history", default=DEFAULT_HISTORY)
+    ap.add_argument("--window", type=int, default=DEFAULT_WINDOW)
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    ap.add_argument("--min-records", type=int, default=DEFAULT_MIN_RECORDS)
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as f:
+        doc = json.load(f)
+
+    if args.command == "record":
+        rec = record(doc, args.history)
+        print(
+            f"recorded {len(rec['metrics'])} metrics for "
+            f"{rec['git_sha'][:12]} ({rec['device_kind']}) -> {args.history}"
+        )
+        return 0
+
+    result = check(
+        doc, args.history, window=args.window,
+        tolerance=args.tolerance, min_records=args.min_records,
+    )
+    if result["baseline_records"] < args.min_records:
+        print(
+            f"sentinel: PASS (only {result['baseline_records']} baseline "
+            f"records, need {args.min_records})"
+        )
+        return 0
+    for r in result["regressions"]:
+        print(
+            f"REGRESSION {r['metric']}: {r['current']:.1f} vs median "
+            f"{r['baseline']:.1f} ({r['ratio']:.2f}x > "
+            f"{args.tolerance:.2f}x)",
+            file=sys.stderr,
+        )
+    print(
+        f"sentinel: {'PASS' if result['ok'] else 'FAIL'} "
+        f"({result['checked']} metrics vs {result['baseline_records']} "
+        f"records, {len(result['regressions'])} regressions)"
+    )
+    return 0 if result["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -748,14 +748,14 @@ def _vertical_dispatch(
     return out
 
 
-def _apss_vertical_sparse(
-    D: SparseCorpus, threshold, k, mesh, axis_name, *,
+def _vertical_sparse_post_split(
+    idx_s, val_s, *, n, m_loc, threshold, k, mesh, axis_name,
     accumulation, block_rows, candidate_capacity, return_stats,
 ):
-    p = mesh.shape[axis_name]
-    n = D.n
-    idx_s, val_s, nnz_s, m_loc = shard_dims(D, p)  # host split: not traceable
-    del nnz_s  # scoring needs only the 0-padded (idx, val) slots
+    """Everything AFTER the host ``shard_dims`` split — pure array-in
+    computation, so it is jit-lowerable (the compile audit AOT-compiles
+    the sparse vertical family through this seam; the public entry stays
+    host-staged because the split itself shapes by data)."""
     ncb = n // block_rows  # divisibility validated by _vertical_dispatch
     cap_loc = idx_s.shape[-1]
 
@@ -776,7 +776,7 @@ def _apss_vertical_sparse(
 
         return partials
 
-    out = _vertical_dispatch(
+    return _vertical_dispatch(
         (jnp.asarray(idx_s), jnp.asarray(val_s)), make_partials, n,
         threshold, k, mesh, axis_name,
         accumulation=accumulation, block_rows=block_rows,
@@ -785,6 +785,24 @@ def _apss_vertical_sparse(
         # The VMA checker has no rule for the scatter/gather ops inside the
         # sparse partial-score primitive; verified numerically by tests.
         strict_vma=False,
+    )
+
+
+def _apss_vertical_sparse(
+    D: SparseCorpus, threshold, k, mesh, axis_name, *,
+    accumulation, block_rows, candidate_capacity, return_stats,
+):
+    p = mesh.shape[axis_name]
+    n = D.n
+    idx_s, val_s, nnz_s, m_loc = shard_dims(D, p)  # host split: not traceable
+    del nnz_s  # scoring needs only the 0-padded (idx, val) slots
+    cap_loc = idx_s.shape[-1]
+
+    out = _vertical_sparse_post_split(
+        idx_s, val_s, n=n, m_loc=m_loc, threshold=threshold, k=k,
+        mesh=mesh, axis_name=axis_name, accumulation=accumulation,
+        block_rows=block_rows, candidate_capacity=candidate_capacity,
+        return_stats=return_stats,
     )
     if telemetry.enabled():
         C = candidate_capacity or default_candidate_capacity(k)
@@ -1266,15 +1284,36 @@ def _apss_2d_sparse(
             step_ticker=ticker,
         ))
 
+    out, stats = _2d_sparse_post_split(
+        idx_s, val_s, nnz_s, m_loc=m_loc, threshold=threshold, k=k,
+        mesh=mesh, row_axis=row_axis, col_axis=col_axis,
+        accumulation=accumulation, block_rows=block_rows,
+        candidate_capacity=C, ticker=ticker,
+    )
+    if return_stats:
+        return out, stats
+    return out
+
+
+def _2d_sparse_post_split(
+    idx_s, val_s, nnz_s, *, m_loc, threshold, k, mesh, row_axis, col_axis,
+    accumulation, block_rows, candidate_capacity, ticker=None,
+):
+    """Everything AFTER the host ``shard_dims`` split — jit-lowerable, so
+    the compile audit can AOT-compile the sparse checkerboard family
+    through this seam (mirrors ``_vertical_sparse_post_split``)."""
+    q = mesh.shape[row_axis]
+    r = mesh.shape[col_axis]
     fn = functools.partial(
         _apss_2d_sparse_local,
         m_loc=m_loc, threshold=threshold, k=k, row_axis=row_axis,
-        col_axis=col_axis, q=q, r=r, block_rows=block_rows, capacity=C,
-        accumulation=accumulation, ticker=ticker,
+        col_axis=col_axis, q=q, r=r, block_rows=block_rows,
+        capacity=candidate_capacity, accumulation=accumulation,
+        ticker=ticker,
     )
     # Same VMA caveat as every sparse schedule: no checker rule for the
     # scatter/gather ops inside the sparse tile primitive.
-    out, stats = shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(
@@ -1292,9 +1331,6 @@ def _apss_2d_sparse(
         ),
         check_vma=False,
     )(jnp.asarray(idx_s), jnp.asarray(val_s), jnp.asarray(nnz_s))
-    if return_stats:
-        return out, stats
-    return out
 
 
 def _apss_2d_sparse_local(

@@ -13,12 +13,25 @@ from ``planner.telemetry`` — zero cost when no sink is active):
 - :mod:`repro.obs.recorder` — bounded flight recorder auto-dumped on
   fault firing, tier-down, and corruption fallback;
 - :mod:`repro.obs.drift` — predicted-vs-measured residuals and stale-
-  calibration flagging.
+  calibration flagging;
+- :mod:`repro.obs.compile` — retrace registry (``CompileMonitor``),
+  ``assert_no_retrace`` budget contracts, AOT lower/compile spans with
+  ``memory_analysis()`` bytes;
+- :mod:`repro.obs.audit` — model-vs-HLO audit over every plannable
+  variant family (lazy import: it pulls in the planner and serving
+  layers, which the runtime hot paths must not).
 
-See DESIGN.md §10 for the span taxonomy and metrics catalog.
+See DESIGN.md §10 for the span taxonomy and metrics catalog, §11 for the
+compile-time half (retrace contracts, audit ratio semantics).
 """
 
-from repro.obs import drift, export, metrics, recorder, trace  # noqa: F401
+from repro.obs import compile, drift, export, metrics, recorder, trace  # noqa: F401,A004
+from repro.obs.compile import (  # noqa: F401
+    CompileMonitor,
+    CompileRecord,
+    RetraceError,
+    assert_no_retrace,
+)
 from repro.obs.drift import DriftReport, Residual, drift_report  # noqa: F401
 from repro.obs.export import write_chrome_trace, write_metrics  # noqa: F401
 from repro.obs.metrics import Histogram, MetricsRegistry  # noqa: F401
@@ -26,10 +39,19 @@ from repro.obs.recorder import FlightRecorder  # noqa: F401
 from repro.obs.trace import Span, Tracer, annotate, event, span  # noqa: F401
 
 __all__ = [
-    "trace", "metrics", "export", "recorder", "drift",
+    "trace", "metrics", "export", "recorder", "drift", "compile", "audit",
     "Tracer", "Span", "span", "event", "annotate",
     "MetricsRegistry", "Histogram",
     "FlightRecorder",
+    "CompileMonitor", "CompileRecord", "RetraceError", "assert_no_retrace",
     "DriftReport", "Residual", "drift_report",
     "write_chrome_trace", "write_metrics",
 ]
+
+
+def __getattr__(name):
+    if name == "audit":
+        import importlib
+
+        return importlib.import_module("repro.obs.audit")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

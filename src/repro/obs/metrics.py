@@ -80,6 +80,28 @@ class Histogram:
                 return min(self.max, max(self.min, mid))
         return self.max
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other``'s samples into this histogram, in place.
+
+        Bucket-wise exact (same-``base`` histograms partition the axis
+        identically, so merged quantiles equal the quantiles of the
+        concatenated sample streams up to the usual bucket-midpoint
+        error). Used to aggregate per-CI-matrix-cell metrics artifacts.
+        """
+        if abs(other.base - self.base) > 1e-12:
+            raise ValueError(
+                f"cannot merge histograms with different bases "
+                f"({self.base} vs {other.base})"
+            )
+        for i, c in other.buckets.items():
+            self.buckets[i] = self.buckets.get(i, 0) + c
+        self.zeros += other.zeros
+        self.count += other.count
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
     def snapshot(self) -> dict:
         if self.count == 0:
             return {"count": 0}
@@ -146,6 +168,24 @@ class MetricsRegistry:
 
     def histogram(self, name: str) -> Optional[Histogram]:
         return self.histograms.get(name)
+
+    # -- aggregation ---------------------------------------------------------
+
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Fold ``other`` into this registry, in place: counters add,
+        histograms bucket-merge, gauges take ``other``'s value when both
+        set one (last-writer-wins — gauges are point-in-time readings,
+        not accumulable). Aggregates per-shard / per-CI-matrix-cell
+        metrics artifacts into one fleet view."""
+        for name, v in other.counters.items():
+            self.counters[name] = self.counters.get(name, 0) + v
+        self.gauges.update(other.gauges)
+        for name, h in other.histograms.items():
+            mine = self.histograms.get(name)
+            if mine is None:
+                mine = self.histograms[name] = Histogram(h.base)
+            mine.merge(h)
+        return self
 
     # -- exposition ----------------------------------------------------------
 

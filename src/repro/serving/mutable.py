@@ -56,7 +56,8 @@ Retrace discipline: capacity grows in powers of two, deltas are bucketed
 to powers of two, worklists are bucket-padded (``pad_worklist``), and the
 valid-row count / live mask / window start enter the jitted inners as
 traced arguments — repeated same-shape appends trace nothing new
-(``TRACE_COUNTS``, asserted by ``tests/test_mutable_index.py``).
+(asserted under an ``obs.compile.assert_no_retrace("serving.mutable")``
+contract by ``tests/test_mutable_index.py``).
 """
 
 from __future__ import annotations
@@ -103,10 +104,18 @@ from repro.kernels.apss_block.ops import (
     fold_rect_packets,
     pad_worklist,
 )
+from repro.obs import compile as obs_compile
 from repro.obs import trace
 from repro.planner import telemetry
 from repro.serving.index import APSSIndex
-from repro.serving.query import TRACE_COUNTS, _query_mask, query_topk
+from repro.serving.query import _query_mask, query_topk
+
+obs_compile.register_entry_points(
+    "serving.mutable",
+    "mutable_update", "mutable_full_stats", "mutable_self_mask",
+    "mutable_zero_rows", "mutable_dense_inner", "mutable_sparse_inner",
+    "mutable_sparse_self_inner",
+)
 
 _META = "meta.json"
 
@@ -117,7 +126,7 @@ def _p2(x: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Jitted state updates (all increment TRACE_COUNTS at trace time only)
+# Jitted state updates (all mark the retrace registry at trace time only)
 # ---------------------------------------------------------------------------
 
 
@@ -125,7 +134,7 @@ def _p2(x: int) -> int:
 def _update_dense(C, maxw, mw, mnnz, delta, nv, w0, *, block_rows, wb):
     """Write a bucketed delta at row ``nv``; recompute the ``wb``-block
     stats window starting at row ``w0`` (covers every touched block)."""
-    TRACE_COUNTS["mutable_update"] += 1
+    obs_compile.mark("mutable_update")
     C = lax.dynamic_update_slice(C, delta, (nv, 0))
     W = lax.dynamic_slice(C, (w0, 0), (wb * block_rows, C.shape[1]))
     ws = dense_block_stats(W, block_rows)
@@ -142,7 +151,7 @@ def _update_sparse(
     block_rows, wb, m,
 ):
     """Sparse twin of :func:`_update_dense` over the ELL triple."""
-    TRACE_COUNTS["mutable_update"] += 1
+    obs_compile.mark("mutable_update")
     idx = lax.dynamic_update_slice(idx, didx, (nv, 0))
     val = lax.dynamic_update_slice(val, dval, (nv, 0))
     nnz = lax.dynamic_update_slice(nnz, dnnz, (nv,))
@@ -160,20 +169,20 @@ def _update_sparse(
 
 @functools.partial(jax.jit, static_argnames=("block_rows",))
 def _full_dense_stats(C, *, block_rows):
-    TRACE_COUNTS["mutable_full_stats"] += 1
+    obs_compile.mark("mutable_full_stats")
     return dense_block_stats(C, block_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "m"))
 def _full_sparse_stats(idx, val, nnz, *, block_rows, m):
-    TRACE_COUNTS["mutable_full_stats"] += 1
+    obs_compile.mark("mutable_full_stats")
     return sparse_block_stats(SparseCorpus(idx, val, nnz, m), block_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("threshold", "use_minsize"))
 def _self_mask(maxw, mw, mnnz, *, threshold, use_minsize):
     """Corpus-vs-corpus live mask for the reverse join (old × new)."""
-    TRACE_COUNTS["mutable_self_mask"] += 1
+    obs_compile.mark("mutable_self_mask")
     st = BlockStats(maxw, mw, mnnz)
     return live_tile_mask(
         st, st, threshold, use_minsize=use_minsize, normalized=True
@@ -187,7 +196,7 @@ def _zero_rows(x, phys):
     The pad value MUST be out of range — jnp scatters clamp by default,
     which would silently re-zero the last row instead of no-op'ing.
     """
-    TRACE_COUNTS["mutable_zero_rows"] += 1
+    obs_compile.mark("mutable_zero_rows")
     return x.at[phys].set(0, mode="drop")
 
 
@@ -214,7 +223,7 @@ def _mut_dense_inner(
     matches itself. Dead/padding columns (``col_live`` False) are masked to
     ``NEG_LARGE`` so they fail any real threshold, including t ≤ 0.
     """
-    TRACE_COUNTS["mutable_dense_inner"] += 1
+    obs_compile.mark("mutable_dense_inner")
     m = Qp.shape[1]
     ncap = C.shape[0]
     Qb = Qp.reshape(grid_q, block_q, m)
@@ -255,7 +264,7 @@ def _mut_sparse_inner(
     the reduction grouping is a property of the row, not of the block it
     lives in, so bits survive deletes and compaction (module doc, rule 2).
     """
-    TRACE_COUNTS["mutable_sparse_inner"] += 1
+    obs_compile.mark("mutable_sparse_inner")
     cap = idx.shape[1]
     ncap = idx.shape[0]
     Qb = Qp.astype(jnp.float32).reshape(grid_q, block_q, -1)
@@ -289,7 +298,7 @@ def _mut_sparse_self_inner(
 ):
     """Sparse reverse join: corpus row blocks as queries, densified per
     live tile (O(live tiles · block · m), never O(corpus · m))."""
-    TRACE_COUNTS["mutable_sparse_self_inner"] += 1
+    obs_compile.mark("mutable_sparse_self_inner")
     cap = idx.shape[1]
     ncap = idx.shape[0]
     Ib = idx.reshape(-1, block_c, cap)
@@ -856,17 +865,24 @@ class MutableAPSSIndex:
             ij, tv = pad_worklist(wlf)
             args = (jnp.asarray(self._live), jnp.asarray(qpos_f),
                     jnp.asarray(ij), jnp.asarray(tv))
+            inner_kwargs = dict(
+                threshold=t, k=self.k, block_q=bqf, block_c=br, grid_q=gqf,
+            )
             if self.is_sparse:
+                obs_compile.offer_capture(
+                    "mutable.sparse_inner", _mut_sparse_inner,
+                    Qp, self._idx, self._val, *args, **inner_kwargs,
+                )
                 fv, fi, fc = _mut_sparse_inner(
-                    Qp, self._idx, self._val, *args,
-                    threshold=t, k=self.k, block_q=bqf, block_c=br,
-                    grid_q=gqf,
+                    Qp, self._idx, self._val, *args, **inner_kwargs,
                 )
             else:
+                obs_compile.offer_capture(
+                    "mutable.dense_inner", _mut_dense_inner,
+                    Qp, self._C, *args, **inner_kwargs,
+                )
                 fv, fi, fc = _mut_dense_inner(
-                    Qp, self._C, *args,
-                    threshold=t, k=self.k, block_q=bqf, block_c=br,
-                    grid_q=gqf,
+                    Qp, self._C, *args, **inner_kwargs,
                 )
             pv = np.asarray(fv)[:rb]
             pi = np.asarray(fi)[:rb]

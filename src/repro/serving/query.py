@@ -18,8 +18,10 @@ Retrace discipline (the server's hot loop must not recompile):
   nothing corpus-sized is rebuilt or re-traced per call,
 - the live-tile worklist is bucket-padded to a power of two
   (``ops.pad_worklist``) so varying live-tile counts reuse compiled code,
-- ``TRACE_COUNTS`` increments at trace time only; ``tests/test_serving.py``
-  asserts a second query adds zero traces.
+- every jitted inner marks the public retrace registry
+  (``repro.obs.compile``) at trace time only; ``tests/test_serving.py``
+  asserts under an ``assert_no_retrace`` contract that a second query
+  compiles nothing.
 
 Sharded indexes (``build_index(mesh=...)``) take the per-shard path: one
 ``shard_map`` scores the replicated query batch against each device's
@@ -30,7 +32,6 @@ over disjoint column ranges — exact).
 
 from __future__ import annotations
 
-import collections
 import functools
 
 import jax
@@ -61,14 +62,23 @@ from repro.kernels.apss_block.ops import (
     pad_worklist,
 )
 from repro.kernels.apss_block.sparse import rect_sparse_tile_candidates_pallas
+from repro.obs import compile as obs_compile
 from repro.obs import metrics, trace
 from repro.planner import telemetry
 from repro.serving.index import APSSIndex
 
-# Trace-time counters (Python side effects run only when jit re-traces).
-# The serving contract is "build once, query many": after the first call of
-# a given shape, these must not move — asserted by tests/test_serving.py.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# Trace-time retrace counters, owned by the public registry
+# (repro.obs.compile.MONITOR). The serving contract is "build once, query
+# many": after the first call of a given shape these must not move —
+# enforced by assert_no_retrace("serving.query") contracts in
+# tests/test_serving.py. This name is a back-compat alias to the SAME
+# Counter object, so legacy dict-snapshot readers keep working.
+TRACE_COUNTS = obs_compile.MONITOR.counts
+
+obs_compile.register_entry_points(
+    "serving.query",
+    "query_mask", "dense_inner", "sparse_inner", "sharded_query",
+)
 
 
 def query_topk(
@@ -205,18 +215,30 @@ def _query_topk_impl(
     ij, tvalid = jnp.asarray(ij), jnp.asarray(tvalid)
 
     if index.is_sparse:
-        values, indices, counts = _rect_sparse_inner(
-            Qp, index.bdims, index.bx, ij, tvalid,
+        inner_kwargs = dict(
             threshold=float(threshold), k=k, block_q=block_q,
             block_c=index.block_rows, nc_valid=index.n, grid_q=grid_q,
             use_kernel=use_kernel, interpret=interpret,
         )
+        obs_compile.offer_capture(
+            "serving.sparse_inner", _rect_sparse_inner,
+            Qp, index.bdims, index.bx, ij, tvalid, **inner_kwargs,
+        )
+        values, indices, counts = _rect_sparse_inner(
+            Qp, index.bdims, index.bx, ij, tvalid, **inner_kwargs,
+        )
     else:
-        values, indices, counts = _rect_dense_inner(
-            Qp, index.corpus, ij, tvalid,
+        inner_kwargs = dict(
             threshold=float(threshold), k=k, block_q=block_q,
             block_c=index.block_rows, nc_valid=index.n, grid_q=grid_q,
             use_kernel=use_kernel, interpret=interpret,
+        )
+        obs_compile.offer_capture(
+            "serving.dense_inner", _rect_dense_inner,
+            Qp, index.corpus, ij, tvalid, **inner_kwargs,
+        )
+        values, indices, counts = _rect_dense_inner(
+            Qp, index.corpus, ij, tvalid, **inner_kwargs,
         )
     return Matches(values=values[:B], indices=indices[:B], counts=counts[:B])
 
@@ -232,7 +254,7 @@ def _query_mask(Qp, corpus_stats, *, threshold, block_q, use_minsize, normalized
     and one ``(B/bq × nb)`` matmul for the upper bounds. Corpus-side stats
     arrive as index leaves — never recomputed here.
     """
-    TRACE_COUNTS["query_mask"] += 1
+    obs_compile.mark("query_mask")
     qstats = dense_block_stats(Qp.astype(jnp.float32), block_q)
     return live_tile_mask(
         qstats, corpus_stats, threshold,
@@ -252,7 +274,7 @@ def _rect_dense_inner(
     threshold, k, block_q, block_c, nc_valid, grid_q, use_kernel, interpret,
 ):
     """Score live rectangular tiles of a DENSE index; fold to Matches."""
-    TRACE_COUNTS["dense_inner"] += 1
+    obs_compile.mark("dense_inner")
     m = Qp.shape[1]
     if use_kernel:
         bk = _pick_bk(m, 512)
@@ -305,7 +327,7 @@ def _rect_sparse_inner(
     nonzero lies inside its own block support (DESIGN.md §5/§6); MXU work
     is ``O(bq · bm · S)``, never ``O(bq · bm · m)``.
     """
-    TRACE_COUNTS["sparse_inner"] += 1
+    obs_compile.mark("sparse_inner")
     Qext = jnp.pad(Qp.astype(jnp.float32), ((0, 0), (0, 1)))
     Qb = Qext.reshape(grid_q, block_q, -1)
 
@@ -363,7 +385,7 @@ def _sharded_query(
     validity is evaluated against GLOBAL row ids, so corpus padding rows
     (which live only in the last shard) never match.
     """
-    TRACE_COUNTS["sharded_query"] += 1
+    obs_compile.mark("sharded_query")
 
     def dense_body(Qr, C_loc):
         from repro.core.apss import similarity_topk

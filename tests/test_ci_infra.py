@@ -80,6 +80,27 @@ def _valid_doc():
                  "rebuild_s": 0.06, "speedup": 2.0},
             ],
         },
+        "provenance": {
+            "git_sha": "deadbeef" * 5, "timestamp": "2026-08-09T00:00:00Z",
+            "device_kind": "cpu", "device_count": 8, "jax_version": "0.4.37",
+        },
+    }
+
+
+def _audit_lane(gated_ok=True):
+    def _e(family, ratio=1.0):
+        return {
+            "family": family, "predicted_flops": 1e6,
+            "hlo_flops": ratio * 1e6, "flop_ratio": ratio,
+            "predicted_link_bytes": 0.0, "hlo_link_bytes": 0.0,
+            "predicted_hbm_bytes": 1e4, "hlo_hbm_bytes": 2e4,
+            "compile": {"t_compile_s": 0.1, "total_bytes": 4096},
+        }
+
+    return {
+        "gated_ok": gated_ok,
+        "gated_families": ["blocked[dense]", "horizontal/ring[dense]"],
+        "entries": [_e("blocked[dense]"), _e("horizontal/ring[dense]")],
     }
 
 
@@ -97,6 +118,9 @@ def test_valid_doc_passes():
     ("planner", "corpora", "sparse_lowdens", "entries", 0, "measured_us"),
     ("mutable",),
     ("mutable", "deltas", 0, "speedup"),
+    ("provenance",),
+    ("provenance", "git_sha"),
+    ("provenance", "jax_version"),
 ])
 def test_missing_key_fails_with_path(path):
     doc = _valid_doc()
@@ -174,6 +198,148 @@ def test_mutable_lane_gates_small_delta_speedup():
     doc = _valid_doc()
     doc["mutable"]["deltas"][1]["speedup"] = 0.9
     check(doc)
+
+
+def test_audit_lane_is_optional_but_checked_when_present():
+    doc = _valid_doc()
+    check(doc)  # no audit lane: fine
+    doc["audit"] = _audit_lane()
+    check(doc)
+    doc["audit"] = _audit_lane(gated_ok=False)
+    with pytest.raises(SchemaError, match="FLOP ratio gate"):
+        check(doc)
+    doc["audit"] = _audit_lane()
+    doc["audit"]["entries"] = doc["audit"]["entries"][:1]  # ring missing
+    with pytest.raises(SchemaError, match="gated families missing"):
+        check(doc)
+    doc["audit"] = _audit_lane()
+    del doc["audit"]["entries"][0]["hlo_flops"]
+    with pytest.raises(SchemaError, match=r"audit\.entries\[0\]"):
+        check(doc)
+
+
+def test_history_record_schema():
+    from benchmarks.check_schema import check_history_record
+
+    rec = {
+        "git_sha": "abc123", "timestamp": "2026-08-09T00:00:00Z",
+        "device_kind": "cpu", "jax_version": "0.4.37",
+        "metrics": {"variants.fused.us_per_call": 10.0},
+    }
+    check_history_record(rec)
+    with pytest.raises(SchemaError, match="empty metric"):
+        check_history_record({**rec, "metrics": {}})
+    with pytest.raises(SchemaError, match="non-negative"):
+        check_history_record({**rec, "metrics": {"x": -1.0}})
+    with pytest.raises(SchemaError, match="missing keys"):
+        check_history_record({k: v for k, v in rec.items() if k != "git_sha"})
+
+
+# -- perf-regression sentinel -------------------------------------------------
+
+
+def _bench_doc(scale=1.0, sha="sha0"):
+    """A minimal artifact with the lanes the sentinel extracts."""
+    return {
+        "variants": {
+            "fused": {"us_per_call": 100.0 * scale},
+            "fused-compacted": {"us_per_call": 40.0 * scale},
+        },
+        "sparse_sweep": {"entries": [{
+            "density_requested": 0.01,
+            "variants": {"sparse-xla": {"us_per_call": 50.0 * scale}},
+        }]},
+        "serving": {
+            "index_build_us": 500.0 * scale,
+            "batches": {"8": {"us_per_query": 20.0 * scale}},
+        },
+        "mutable": {"deltas": [{"delta": 16, "append_s": 0.01 * scale}]},
+        "provenance": {
+            "git_sha": sha, "timestamp": "t", "device_kind": "cpu",
+            "jax_version": "0.4.37",
+        },
+    }
+
+
+def test_sentinel_extracts_stable_metrics():
+    from benchmarks.check_schema import check_history_record
+    from benchmarks.sentinel import extract_metrics, record
+
+    m = extract_metrics(_bench_doc())
+    assert m["variants.fused.us_per_call"] == 100.0
+    assert m["sparse_sweep.d=0.01.sparse-xla.us_per_call"] == 50.0
+    assert m["serving.batch=8.us_per_query"] == 20.0
+    assert m["mutable.delta=16.append_s"] == 0.01
+    # the record the sentinel appends satisfies the history schema
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        rec = record(_bench_doc(), f"{d}/h.jsonl")
+    check_history_record(rec)
+
+
+def test_sentinel_passes_without_baseline_and_flags_2x_slowdown(tmp_path):
+    """The acceptance scenario: seed a history, re-check unchanged (PASS),
+    then check a synthetic 2x slowdown (FAIL naming the metrics)."""
+    from benchmarks import sentinel
+
+    hist = str(tmp_path / "BENCH_history.jsonl")
+    # no history at all: check passes (nothing to regress from)
+    assert sentinel.check(_bench_doc(), hist)["ok"]
+    for i in range(3):  # seed three baseline runs
+        sentinel.record(_bench_doc(sha=f"base{i}"), hist)
+    ok = sentinel.check(_bench_doc(scale=1.1, sha="pr"), hist)
+    assert ok["ok"] and ok["checked"] >= 5  # 10% drift: inside tolerance
+    bad = sentinel.check(_bench_doc(scale=2.0, sha="pr"), hist)
+    assert not bad["ok"]
+    flagged = {r["metric"] for r in bad["regressions"]}
+    assert "variants.fused.us_per_call" in flagged
+    assert all(r["ratio"] == pytest.approx(2.0) for r in bad["regressions"])
+
+
+def test_sentinel_rerecord_same_sha_replaces_not_duplicates(tmp_path):
+    from benchmarks import sentinel
+
+    hist = str(tmp_path / "h.jsonl")
+    sentinel.record(_bench_doc(sha="a"), hist)
+    sentinel.record(_bench_doc(scale=3.0, sha="a"), hist)  # supersedes
+    records = sentinel.load_history(hist)
+    assert len(records) == 1
+    assert records[0]["metrics"]["variants.fused.us_per_call"] == 300.0
+
+
+def test_sentinel_baseline_excludes_own_sha_and_other_devices(tmp_path):
+    from benchmarks import sentinel
+
+    hist = str(tmp_path / "h.jsonl")
+    sentinel.record(_bench_doc(sha="mine"), hist)  # own prior run
+    other = _bench_doc(scale=0.1, sha="gpu-run")
+    other["provenance"]["device_kind"] = "gpu"
+    sentinel.record(other, hist)
+    # only baselines: own sha (excluded) + gpu (excluded) → no baseline
+    res = sentinel.check(_bench_doc(scale=5.0, sha="mine"), hist)
+    assert res["ok"] and res["baseline_records"] == 0
+
+
+def test_sentinel_cli(tmp_path, capsys):
+    from benchmarks import sentinel
+
+    art = tmp_path / "bench.json"
+    hist = str(tmp_path / "h.jsonl")
+    art.write_text(json.dumps(_bench_doc(sha="base")))
+    assert sentinel.main(["record", "--artifact", str(art),
+                          "--history", hist]) == 0
+    slow = tmp_path / "slow.json"
+    slow.write_text(json.dumps(_bench_doc(scale=2.0, sha="pr")))
+    assert sentinel.main(["check", "--artifact", str(slow),
+                          "--history", hist]) == 1
+    err = capsys.readouterr().err
+    assert "REGRESSION" in err and "variants.fused.us_per_call" in err
+    # unchanged re-run passes
+    same = tmp_path / "same.json"
+    same.write_text(json.dumps(_bench_doc(sha="pr2")))
+    assert sentinel.main(["check", "--artifact", str(same),
+                          "--history", hist]) == 0
 
 
 def test_cli_roundtrip(tmp_path, capsys):
@@ -295,3 +461,12 @@ def test_ci_workflow_wires_the_gate():
     # observability artifacts: the bench/chaos lanes emit a Chrome trace +
     # metrics snapshot and upload them per matrix cell
     assert "--trace-out" in wf and "--metrics-out" in wf
+    # compile audit + perf-regression sentinel (ISSUE 9): the bench smoke
+    # carries --audit (gated by check_schema), and the sentinel checks then
+    # records against a history persisted across runs via actions/cache
+    assert "--audit" in wf
+    assert "benchmarks.sentinel check" in wf
+    assert "benchmarks.sentinel record" in wf
+    assert "actions/cache" in wf
+    assert "BENCH_history" in wf
+    assert wf.index("sentinel check") < wf.index("sentinel record")

@@ -22,7 +22,7 @@ from repro.core.sparse import from_dense, to_dense
 from repro.planner import telemetry
 from repro.robust.faults import Fault, FaultPlan
 from repro.serving import MutableAPSSIndex, RetrievalServer
-from repro.serving.query import TRACE_COUNTS
+from repro.obs import compile as obs_compile
 
 T = 0.15
 K = 8
@@ -273,13 +273,12 @@ def test_no_retrace_on_repeated_same_shape_appends():
     for _ in range(2):  # warmup: trace every delta-join shape once
         mi.append(_rows(rng, 8))
         mi.query(Q)
-    before = dict(TRACE_COUNTS)
-    for _ in range(2):  # rows 32→40→48, all within the 64-row capacity
-        mi.append(_rows(rng, 8))
-        mi.query(Q)
-    mi.delete([int(mi.graph()[0][0])])
-    mi.delete([int(mi.graph()[0][0])])
-    assert dict(TRACE_COUNTS) == before
+    with obs_compile.assert_no_retrace("serving.mutable", "serving.query"):
+        for _ in range(2):  # rows 32→40→48, all within the 64-row capacity
+            mi.append(_rows(rng, 8))
+            mi.query(Q)
+        mi.delete([int(mi.graph()[0][0])])
+        mi.delete([int(mi.graph()[0][0])])
 
 
 # -- durability meta ---------------------------------------------------------

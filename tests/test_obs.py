@@ -108,21 +108,20 @@ def test_disabled_span_is_shared_noop_singleton():
 
 def test_no_sinks_means_no_new_traces_and_no_callbacks():
     """The instrumented serving hot path adds zero device work when no
-    sink is active: a repeat query re-traces nothing (TRACE_COUNTS), and
-    the jaxpr of the instrumented sweep carries a debug_callback ONLY
-    when telemetry is on (the StepTicker seam)."""
+    sink is active: a repeat query re-traces nothing (the retrace
+    registry), and the jaxpr of the instrumented sweep carries a
+    debug_callback ONLY when telemetry is on (the StepTicker seam)."""
     from repro.core.distributed import apss_2d
     from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.obs import compile as obs_compile
     from repro.serving import build_index, query_topk
-    from repro.serving.query import TRACE_COUNTS
 
     sp = sparse_clustered_corpus(256, 128, 8.0, n_clusters=4, seed=0)
     index = build_index(sp, block_rows=64, normalize=False)
     Q = perturbed_queries(sp, 4, seed=1)
     jax.block_until_ready(query_topk(index, Q, T, K).values)
-    before = dict(TRACE_COUNTS)
-    jax.block_until_ready(query_topk(index, Q, T, K).values)
-    assert dict(TRACE_COUNTS) == before  # zero new traces without sinks
+    with obs_compile.assert_no_retrace():  # watch EVERY entry point
+        jax.block_until_ready(query_topk(index, Q, T, K).values)
 
     from repro.compat import make_mesh
 

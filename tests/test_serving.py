@@ -129,7 +129,7 @@ from repro.serving import (  # noqa: E402
     build_index,
     query_topk,
 )
-from repro.serving.query import TRACE_COUNTS  # noqa: E402
+from repro.obs import compile as obs_compile  # noqa: E402
 
 
 def _corpus_queries(n, m, density, nq, seed=0):
@@ -206,20 +206,15 @@ def test_index_built_once_and_reused_no_retrace():
     index = build_index(from_dense(Cn), block_rows=64, normalize=False)
 
     got0 = query_topk(index, jnp.asarray(Qn), 0.3, 8, block_q=16)
-    before = dict(TRACE_COUNTS)
-    # Support-structure builders must not run during queries at all.
+    # Support-structure builders must not run during queries at all, and
+    # no serving entry point may re-trace (public contract API).
     orig = sindex.block_support_gather
     sindex.block_support_gather = None  # any call would TypeError
     try:
-        got1 = query_topk(index, jnp.asarray(Qn * 0.7), 0.3, 8, block_q=16)
+        with obs_compile.assert_no_retrace("serving.query"):
+            got1 = query_topk(index, jnp.asarray(Qn * 0.7), 0.3, 8, block_q=16)
     finally:
         sindex.block_support_gather = orig
-    delta = {
-        key: TRACE_COUNTS[key] - before.get(key, 0)
-        for key in TRACE_COUNTS
-        if TRACE_COUNTS[key] - before.get(key, 0)
-    }
-    assert delta == {}, f"second query re-traced: {delta}"
     # Scaled queries keep the same candidate structure admissible but must
     # rescore: results reflect the new values.
     assert np.all(np.asarray(got1.counts) <= np.asarray(got0.counts))
@@ -238,9 +233,9 @@ def test_query_batches_hit_worklist_bucket_cache():
         Q = np.abs(rng.standard_normal((4, 96))).astype(np.float32)
         Q *= rng.random((4, 96)) < (0.05 + 0.1 * i)
         Qn = np.asarray(normalize_rows(jnp.asarray(Q)))
-        before = sum(TRACE_COUNTS.values())
+        before = sum(obs_compile.snapshot().values())
         query_topk(index, jnp.asarray(Qn), 0.25, 4, block_q=8)
-        traced.append(sum(TRACE_COUNTS.values()) - before)
+        traced.append(sum(obs_compile.snapshot().values()) - before)
     # O(log tiles) buckets, not O(calls): at most the first two calls may
     # compile (distinct bucket sizes); later batches must all be cache hits.
     assert traced[-1] == 0 and traced[-2] == 0, traced
@@ -299,11 +294,5 @@ def test_sharded_index_second_query_no_retrace(mesh8):
     Cn, Qn = _corpus_queries(128, 64, 0.15, 4, seed=12)
     index = build_index(Cn, block_rows=16, mesh=mesh8, normalize=False)
     query_topk(index, jnp.asarray(Qn), 0.3, 4)
-    before = dict(TRACE_COUNTS)
-    query_topk(index, jnp.asarray(Qn * 0.5), 0.3, 4)
-    delta = {
-        key: TRACE_COUNTS[key] - before.get(key, 0)
-        for key in TRACE_COUNTS
-        if TRACE_COUNTS[key] - before.get(key, 0)
-    }
-    assert delta == {}, delta
+    with obs_compile.assert_no_retrace("serving.query"):
+        query_topk(index, jnp.asarray(Qn * 0.5), 0.3, 4)
