@@ -18,10 +18,27 @@ regime (sparse clustered-Zipfian corpus, default n=65536 m=8192):
 - ``amortized_speedup_batch64``  rebuild ÷ indexed per-query latency —
                          the headline amortization factor (≥ 5× required)
 
+Two throughput lanes ride along (ISSUE 10 — the CI-gated QPS/p99 curve):
+
+- ``servers``      step-boundary :class:`RetrievalServer` vs slot-admission
+                   :class:`ContinuousRetrievalServer` at two batch regimes,
+                   each measured closed-loop (burst → ``qps``) AND under
+                   paced arrivals (→ per-request submit→latch p50/p95/p99).
+                   The step server quantizes every request to its batch's
+                   fill boundary; continuous batching starts service at
+                   submit — the p99 gap between the two IS the tentpole's
+                   claim, and ``check_schema`` requires continuous ≤ step.
+- ``early_exit``   the ub-ordered worklist's early-exit on an overlapping
+                   clustered corpus: skipped live tiles (> 0 required) with
+                   bit-exact top-k vs the full scan.
+
+``serving.qps_batch64`` / ``serving.p99_us`` scalars from the continuous
+lane feed ``benchmarks.sentinel`` (QPS is gated higher-is-better).
+
 Queries are perturbed corpus rows drawn from a contiguous cluster range
 per batch (topical traffic — the regime where the prebuilt posting lists
 prune hardest). Run standalone to merge a ``serving`` section into
-BENCH_apss.json:
+BENCH_apss.json (``--smoke`` for the CI-sized run):
 
     PYTHONPATH=src python -m benchmarks.bench_serve --json BENCH_apss.json
 """
@@ -36,6 +53,149 @@ import time
 import numpy as np
 
 BATCHES = (1, 8, 64)
+SERVER_REGIMES = (8, 64)
+
+
+def _drive_server(srv, queries, *, nreq: int, gap_s: float, step_when_full: bool):
+    """Push ``nreq`` requests through a server; return (qps, latency hist).
+
+    ``gap_s > 0`` paces arrivals (open-loop-ish traffic: per-request
+    latency includes queueing); ``gap_s == 0`` is a closed-loop burst
+    (throughput capacity). The step server is driven the way its contract
+    reads — ``step()`` at each batch-full boundary, drain at the end — so
+    its latencies honestly include the fill wait the continuous server
+    eliminates.
+    """
+    import time as _time
+
+    from repro.obs.metrics import MetricsRegistry
+
+    with MetricsRegistry() as reg:
+        t0 = _time.perf_counter()
+        rids = []
+        for i in range(nreq):
+            rids.append(srv.submit(queries[i % len(queries)]))
+            if step_when_full and len(srv._pending) >= srv.max_batch:
+                srv.step()
+            if gap_s:
+                _time.sleep(gap_s)
+        for r in rids:
+            srv.result(r)
+        wall = _time.perf_counter() - t0
+        hist = reg.histograms.get("serving.latency_s")
+    return nreq / wall, hist
+
+
+def measure_servers(
+    index,
+    queries,
+    *,
+    threshold: float,
+    k: int,
+    nreq: int = 192,
+    workers: int = 2,
+) -> dict:
+    """Step vs continuous server, closed-loop QPS + paced-arrival tail."""
+    from repro.serving import ContinuousRetrievalServer, RetrievalServer
+
+    out: dict = {}
+    for max_batch in SERVER_REGIMES:
+        kwargs = dict(
+            threshold=threshold, k=k, max_batch=max_batch, cache_size=0
+        )
+
+        def make(name):
+            if name == "continuous":
+                return ContinuousRetrievalServer(
+                    index, workers=workers, **kwargs
+                )
+            return RetrievalServer(index, **kwargs)
+
+        # Warm the block_q bucket's compile cache off the clock.
+        warm = make("step")
+        warm.serve(queries[:max_batch])
+        warm.close()
+        # Arrival pacing at ~the full-batch service rate: requests arrive
+        # about as fast as a full batch retires them, so the step server's
+        # fill-boundary wait is visible but neither server falls behind.
+        burst_qps, _ = _drive_server(
+            make("step"), queries, nreq=nreq, gap_s=0.0, step_when_full=True
+        )
+        gap_s = 1.0 / max(burst_qps, 1.0)
+        regime: dict = {}
+        for name in ("step", "continuous"):
+            srv = make(name)
+            try:
+                qps, _ = _drive_server(
+                    srv, queries, nreq=nreq, gap_s=0.0,
+                    step_when_full=(name == "step"),
+                )
+                _, hist = _drive_server(
+                    srv, queries, nreq=nreq, gap_s=gap_s,
+                    step_when_full=(name == "step"),
+                )
+            finally:
+                srv.close()
+            regime[name] = {
+                "qps": qps,
+                "p50_us": hist.quantile(0.50) * 1e6,
+                "p95_us": hist.quantile(0.95) * 1e6,
+                "p99_us": hist.quantile(0.99) * 1e6,
+                "requests": nreq,
+                "paced_gap_us": gap_s * 1e6,
+            }
+        out[str(max_batch)] = regime
+    return out
+
+
+def measure_early_exit(
+    *,
+    n: int = 8192,
+    m: int = 2048,
+    avg_nnz: float = 16.0,
+    block: int = 64,
+    k: int = 8,
+    threshold: float = 0.01,
+    batch: int = 64,
+    seed: int = 2,
+) -> dict:
+    """Early-exit lane: skipped tiles > 0 with bit-exact results.
+
+    Clustered corpus WITH a weak shared vocabulary (``overlap_dims``): at a
+    low threshold, cross-cluster tiles stay live (small nonzero bound — the
+    mask cannot drop them) but lose to any query whose top-k fills within
+    its own cluster, so the ub-descending scan stops before scoring them.
+    """
+    import numpy as np
+
+    from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving import build_index, query_topk
+
+    sp = sparse_clustered_corpus(
+        n, m, avg_nnz, n_clusters=16, seed=seed, overlap_dims=8
+    )
+    index = build_index(sp, block_rows=block, normalize=False)
+    Q = perturbed_queries(sp, batch, seed=seed + 1)
+    with MetricsRegistry() as reg:
+        ref = query_topk(index, Q, threshold, k)
+        ee = query_topk(index, Q, threshold, k, early_exit=True)
+    skipped = int(reg.counters.get("serving.early_exit_skipped_tiles", 0))
+    bit_exact = bool(
+        np.array_equal(np.asarray(ref.values), np.asarray(ee.values))
+        and np.array_equal(np.asarray(ref.indices), np.asarray(ee.indices))
+        and np.array_equal(
+            np.minimum(np.asarray(ref.counts), k), np.asarray(ee.counts)
+        )
+    )
+    return {
+        "n": sp.n,
+        "m": sp.m,
+        "threshold": threshold,
+        "k": k,
+        "skipped_tiles": skipped,
+        "bit_exact": bit_exact,
+    }
 
 
 def measure(
@@ -48,6 +208,9 @@ def measure(
     k: int = 32,
     iters: int = 3,
     latency_iters: int = 20,
+    server_requests: int = 192,
+    ee_n: int = 8192,
+    ee_m: int = 2048,
     seed: int = 0,
 ) -> dict:
     import jax
@@ -126,6 +289,18 @@ def measure(
         "us_per_query": rb_us / B,
     }
     out["amortized_speedup_batch64"] = (rb_us / B) / indexed_pq
+
+    # Server throughput lanes (ISSUE 10): the QPS/p99 curve + early-exit.
+    out["servers"] = measure_servers(
+        index, qmax, threshold=threshold, k=k,
+        nreq=server_requests, workers=2,
+    )
+    out["early_exit"] = measure_early_exit(
+        n=ee_n, m=ee_m, avg_nnz=avg_nnz, seed=seed + 2,
+    )
+    cont64 = out["servers"]["64"]["continuous"]
+    out["qps_batch64"] = cont64["qps"]
+    out["p99_us"] = cont64["p99_us"]
     return out
 
 
@@ -150,11 +325,20 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.5)
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: small corpus, fewer iters/requests")
     args = ap.parse_args()
 
+    if args.smoke:
+        args.n = min(args.n, 4096)
+        args.m = min(args.m, 1024)
+        args.iters = min(args.iters, 2)
+        kwargs = dict(server_requests=96, ee_n=2048, ee_m=1024)
+    else:
+        kwargs = {}
     r = measure(
         args.n, args.m, avg_nnz=args.avg_nnz, block=args.block,
-        threshold=args.threshold, k=args.k, iters=args.iters,
+        threshold=args.threshold, k=args.k, iters=args.iters, **kwargs,
     )
     print(f"index build: {r['index_build_us']/1e6:.2f}s "
           f"({r['index_bytes']/2**20:.0f} MiB)")
@@ -167,6 +351,16 @@ def main() -> None:
     print(f"rebuild-per-call batch 64: {r['rebuild']['us_per_query']:.0f} "
           f"us/query -> amortized speedup "
           f"{r['amortized_speedup_batch64']:.1f}x")
+    for regime, servers in r["servers"].items():
+        for name, e in servers.items():
+            print(f"server max_batch={regime:>2} {name:>10}: "
+                  f"{e['qps']:.1f} QPS burst, paced p50/p95/p99 "
+                  f"{e['p50_us']:.0f}/{e['p95_us']:.0f}/{e['p99_us']:.0f} us")
+    ee = r["early_exit"]
+    print(f"early-exit (n={ee['n']} t={ee['threshold']}): "
+          f"{ee['skipped_tiles']} tiles skipped, bit_exact={ee['bit_exact']}")
+    print(f"headline: serving.qps_batch64={r['qps_batch64']:.1f} "
+          f"serving.p99_us={r['p99_us']:.0f}")
     if args.json:
         merge_into(args.json, r)
         print(f"-> merged 'serving' into {args.json}")

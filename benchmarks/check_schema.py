@@ -40,7 +40,9 @@ def _require_keys(d: dict, keys: set, where: str) -> None:
 
 
 def check_sparse_sweep(doc: dict) -> None:
-    _require_keys(doc, {"density", "live_tile_fraction", "variants", "sparse_sweep"}, "$")
+    _require_keys(
+        doc, {"density", "live_tile_fraction", "variants", "sparse_sweep"}, "$"
+    )
     sweep = doc["sparse_sweep"]
     _require(sweep.get("entries"), "$.sparse_sweep", "empty sparse sweep")
     for i, e in enumerate(sweep["entries"]):
@@ -60,7 +62,8 @@ def check_serving(doc: dict) -> None:
     _require_keys(
         s,
         {"index_build_us", "index_bytes", "batches", "rebuild",
-         "amortized_speedup_batch64"},
+         "amortized_speedup_batch64", "servers", "early_exit",
+         "qps_batch64", "p99_us"},
         "$.serving",
     )
     _require_keys(s["batches"], {"1", "8", "64"}, "$.serving.batches")
@@ -84,6 +87,51 @@ def check_serving(doc: dict) -> None:
         )
     _require(s["amortized_speedup_batch64"] > 0, "$.serving",
              "amortized_speedup_batch64 must be positive")
+    # The QPS/p99 curve (ISSUE 10): step vs continuous at both batch
+    # regimes, each with ordered positive percentiles. The headline claim
+    # is gated at the LARGEST regime only — continuous batching must beat
+    # the step server's p99 there (at tiny batches the fill-boundary wait
+    # the continuous server eliminates is itself tiny, so the step server
+    # can legitimately win on thread-overhead grounds).
+    _require_keys(s["servers"], {"8", "64"}, "$.serving.servers")
+    for regime, servers in s["servers"].items():
+        _require_keys(
+            servers, {"step", "continuous"}, f"$.serving.servers[{regime}]"
+        )
+        for name, e in servers.items():
+            where = f"$.serving.servers[{regime}].{name}"
+            _require_keys(
+                e, {"qps", "p50_us", "p95_us", "p99_us", "requests"}, where
+            )
+            _require(e["qps"] > 0, where, "qps must be positive")
+            _require(e["p50_us"] > 0, where, "p50 must be positive")
+            _require(
+                e["p50_us"] <= e["p95_us"] <= e["p99_us"], where,
+                f"percentiles unordered: p50 {e['p50_us']:.0f} / p95 "
+                f"{e['p95_us']:.0f} / p99 {e['p99_us']:.0f} us",
+            )
+    top = s["servers"]["64"]
+    _require(
+        top["continuous"]["p99_us"] <= top["step"]["p99_us"],
+        "$.serving.servers[64]",
+        f"continuous p99 ({top['continuous']['p99_us']:.0f}us) exceeds "
+        f"step p99 ({top['step']['p99_us']:.0f}us) — slot-granularity "
+        "admission should beat the step-boundary latch at full batch",
+    )
+    # The early-exit lane: the ub-ordered worklist must actually skip
+    # live tiles AND stay bit-exact vs the full scan.
+    ee = s["early_exit"]
+    _require_keys(
+        ee, {"n", "m", "threshold", "k", "skipped_tiles", "bit_exact"},
+        "$.serving.early_exit",
+    )
+    _require(ee["skipped_tiles"] > 0, "$.serving.early_exit",
+             "early exit skipped no live tiles")
+    _require(ee["bit_exact"] is True, "$.serving.early_exit",
+             "early exit diverged from the full scan")
+    # The sentinel's headline scalars mirror the continuous lane at 64.
+    _require(s["qps_batch64"] > 0, "$.serving", "qps_batch64 must be positive")
+    _require(s["p99_us"] > 0, "$.serving", "p99_us must be positive")
 
 
 def _check_planner_corpus(name: str, c: dict, *, where: str, gate_2x: bool) -> None:

@@ -12,7 +12,10 @@ gates the current run against a **rolling-median baseline** of the last
   sha replaces the previous record rather than double-counting it in its
   own baseline);
 - ``check``: flag any metric whose current value exceeds
-  ``tolerance ×`` the rolling median of prior records. The median (not
+  ``tolerance ×`` the rolling median of prior records — inverted for the
+  throughput lanes in :data:`HIGHER_IS_BETTER` (``serving.qps_batch64``),
+  where the regression is a drop below ``median / tolerance``. The median
+  (not
   the last run) is the baseline precisely because single CI runs are
   noisy — one slow machine poisons a last-run baseline but moves a
   5-run median by nothing. With fewer than ``min_records`` prior
@@ -43,13 +46,19 @@ DEFAULT_WINDOW = 5
 DEFAULT_TOLERANCE = 1.5
 DEFAULT_MIN_RECORDS = 1
 
+# Metrics where a DROP is the regression (throughput lanes). Everything
+# else is lower-is-better latency/cost; for these the gate inverts:
+# flag when value < baseline / tolerance.
+HIGHER_IS_BETTER = frozenset({"serving.qps_batch64"})
+
 
 def extract_metrics(doc: dict) -> dict:
-    """Flatten the stable lower-is-better scalars out of a bench artifact.
+    """Flatten the stable scalar metrics out of a bench artifact.
 
     Keys are dotted paths; every value is a float in the lane's native
-    unit (µs for timing lanes, seconds for the mutable delta lane). Lanes
-    absent from the artifact are simply skipped — partial artifacts
+    unit (µs for timing lanes, seconds for the mutable delta lane, QPS
+    for the serving throughput lane — see :data:`HIGHER_IS_BETTER`).
+    Lanes absent from the artifact are simply skipped — partial artifacts
     (``--only``-style runs) still record what they measured.
     """
     out: dict[str, float] = {}
@@ -69,6 +78,10 @@ def extract_metrics(doc: dict) -> dict:
     for b, v in (serving.get("batches") or {}).items():
         if isinstance(v, dict) and "us_per_query" in v:
             out[f"serving.batch={b}.us_per_query"] = float(v["us_per_query"])
+    if "qps_batch64" in serving:
+        out["serving.qps_batch64"] = float(serving["qps_batch64"])
+    if "p99_us" in serving:
+        out["serving.p99_us"] = float(serving["p99_us"])
     mutable = doc.get("mutable") or {}
     for e in mutable.get("deltas", ()):
         if "append_s" in e:
@@ -157,12 +170,21 @@ def check(
             continue
         checked += 1
         baseline = statistics.median(samples)
-        if baseline > 0 and value > tolerance * baseline:
+        if baseline <= 0:
+            continue
+        if metric in HIGHER_IS_BETTER:
+            # throughput: a drop below baseline/tolerance is the regression
+            bad = value < baseline / tolerance
+            ratio = baseline / value if value > 0 else float("inf")
+        else:
+            bad = value > tolerance * baseline
+            ratio = value / baseline
+        if bad:
             regressions.append({
                 "metric": metric,
                 "current": value,
                 "baseline": baseline,
-                "ratio": value / baseline,
+                "ratio": ratio,
             })
     return {
         "ok": not regressions,

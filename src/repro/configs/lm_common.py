@@ -79,7 +79,9 @@ def _lm_static_info(cfg, *, tokens: int, kind: str, cache_len: int = 0) -> dict:
     }
 
 
-def build_train_cell(cfg: TransformerConfig, mesh, *, global_batch: int, seq_len: int) -> CellBuild:
+def build_train_cell(
+    cfg: TransformerConfig, mesh, *, global_batch: int, seq_len: int
+) -> CellBuild:
     cfg = dataclasses.replace(cfg, fsdp=True)
     params = _params_sds(cfg)
     opt = sds_like(jax.eval_shape(adamw_init, params))
@@ -100,7 +102,9 @@ def build_train_cell(cfg: TransformerConfig, mesh, *, global_batch: int, seq_len
     )
 
 
-def build_prefill_cell(cfg: TransformerConfig, mesh, *, global_batch: int, seq_len: int) -> CellBuild:
+def build_prefill_cell(
+    cfg: TransformerConfig, mesh, *, global_batch: int, seq_len: int
+) -> CellBuild:
     cfg = dataclasses.replace(cfg, fsdp=False, remat=False)
     params = _params_sds(cfg)
     tokens = sds((global_batch, seq_len), jnp.int32)

@@ -170,15 +170,21 @@ def recsys_shapes(arch, init_fn, spec_fn, score_fn, retrieval_fn) -> dict:
         ),
         "serve_p99": ShapeCell(
             kind="serve", desc="batch=512 (online-inference)",
-            build=lambda cfg, mesh: _build_serve(cfg, mesh, init_fn, spec_fn, score_fn, 512),
+            build=lambda cfg, mesh: _build_serve(
+                cfg, mesh, init_fn, spec_fn, score_fn, 512
+            ),
         ),
         "serve_bulk": ShapeCell(
             kind="serve", desc="batch=262144 (offline-scoring)",
-            build=lambda cfg, mesh: _build_serve(cfg, mesh, init_fn, spec_fn, score_fn, 262144),
+            build=lambda cfg, mesh: _build_serve(
+                cfg, mesh, init_fn, spec_fn, score_fn, 262144
+            ),
         ),
         "retrieval_cand": ShapeCell(
             kind="retrieval",
             desc="batch=1 n_candidates=1,000,000 (APSS-backed retrieval)",
-            build=lambda cfg, mesh: _build_retrieval(cfg, mesh, init_fn, spec_fn, retrieval_fn),
+            build=lambda cfg, mesh: _build_retrieval(
+                cfg, mesh, init_fn, spec_fn, retrieval_fn
+            ),
         ),
     }

@@ -110,7 +110,9 @@ def merge_matches(a: Matches, b: Matches) -> Matches:
     )
 
 
-def dedupe_candidates(values: jax.Array, indices: jax.Array) -> tuple[jax.Array, jax.Array]:
+def dedupe_candidates(
+    values: jax.Array, indices: jax.Array
+) -> tuple[jax.Array, jax.Array]:
     """Deduplicate per-row ``(value, index)`` candidate lists by index.
 
     Duplicates arise in the vertical compressed accumulation when several

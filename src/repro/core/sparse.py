@@ -182,7 +182,9 @@ def density(sp: SparseCorpus) -> float:
     return float(np.asarray(sp.nnz).sum()) / float(sp.n * sp.m)
 
 
-def shard_dims(sp: SparseCorpus, p: int) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+def shard_dims(
+    sp: SparseCorpus, p: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Host-side vertical (dimension) split into ``p`` contiguous slices.
 
     The paper's 1-D vertical distribution in its natural habitat: device

@@ -54,7 +54,9 @@ class RecsysPipeline:
     def get_batch(self, step: int) -> dict:
         rng = _rng(self.seed, step)
         b = self.batch_size
-        hist = rng.integers(-1, self.n_items, size=(b, self.history_len), dtype=np.int32)
+        hist = rng.integers(
+            -1, self.n_items, size=(b, self.history_len), dtype=np.int32
+        )
         items = rng.integers(0, self.n_items, size=(b,), dtype=np.int32)
         if self.kind == "two-tower":
             return {
@@ -65,7 +67,9 @@ class RecsysPipeline:
                 "item_ids": items,
             }
         if self.kind == "seq":  # bert4rec masked cloze
-            ids = rng.integers(0, self.n_items, size=(b, self.history_len), dtype=np.int32)
+            ids = rng.integers(
+                0, self.n_items, size=(b, self.history_len), dtype=np.int32
+            )
             mask = rng.random((b, self.history_len)) < 0.15
             labels = ids.copy()
             masked = ids.copy()
@@ -115,7 +119,9 @@ class GraphPipeline:
         indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
         return indptr, dst
 
-    def batched_small_graphs(self, batch: int, nodes: int, edges: int, step: int) -> dict:
+    def batched_small_graphs(
+        self, batch: int, nodes: int, edges: int, step: int
+    ) -> dict:
         """`molecule` shape: a batch of small graphs, block-diagonal packed."""
         rng = _rng(self.seed, step, stream=2)
         N, E = batch * nodes, batch * edges

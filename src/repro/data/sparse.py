@@ -106,6 +106,8 @@ def sparse_clustered_corpus(
     n_clusters: int = 32,
     zipf_alpha: float = 1.1,
     seed: int = 0,
+    overlap_dims: int = 0,
+    overlap_scale: float = 0.25,
 ) -> SparseCorpus:
     """Topic-clustered Zipfian corpus, CSR-direct (pruning-friendly regime).
 
@@ -113,21 +115,44 @@ def sparse_clustered_corpus(
     ``m / n_clusters`` dims (see ``data.synthetic.clustered_corpus`` for
     why this is the regime where tile bounds bite — and where the inverted
     index proves cross-cluster tiles share no dimension support at all).
+
+    ``overlap_dims > 0`` reserves that many leading dimensions as a shared
+    background vocabulary: every row adds two low-weight (``overlap_scale``)
+    nonzeros there, so cross-cluster tiles get a SMALL but nonzero upper
+    bound instead of a zero one. That is the early-exit regime (DESIGN.md
+    §12): at a low threshold those tiles stay live — the mask alone cannot
+    drop them — but any query whose top-k fills within its own cluster
+    beats their bound, so the ub-ordered scan stops instead of scoring
+    them. Default 0 keeps the historical fully-disjoint shape.
     """
     rng = np.random.default_rng(seed)
-    band = m // n_clusters
+    ov = int(overlap_dims)
+    n_sh = 2 if ov >= 2 else ov
+    band = (m - ov) // n_clusters
     rows_per = -(-n // n_clusters)
     pop = _zipf_pop(band, zipf_alpha)
     nnz = np.minimum(np.maximum(1, rng.poisson(avg_nnz, size=n)), band).astype(
         np.int32
     )
-    cap = int(nnz.max())
+    cap = int(nnz.max()) + n_sh
     indices = np.zeros((n, cap), np.int32)
     values = np.zeros((n, cap), np.float32)
     for i in range(n):
         c = min(i // rows_per, n_clusters - 1)
         k = int(nnz[i])
-        dims = np.sort(c * band + rng.choice(band, size=k, replace=False, p=pop))
-        indices[i, :k] = dims
-        values[i, :k] = np.abs(rng.standard_normal(k)).astype(np.float32) + 0.05
+        dims = ov + c * band + rng.choice(band, size=k, replace=False, p=pop)
+        vals = np.abs(rng.standard_normal(k)).astype(np.float32) + 0.05
+        if n_sh:
+            sh = rng.choice(ov, size=n_sh, replace=False)
+            shv = overlap_scale * (
+                np.abs(rng.standard_normal(n_sh)).astype(np.float32) + 0.05
+            )
+            dims = np.concatenate([sh, dims])
+            vals = np.concatenate([shv, vals])
+            k += n_sh
+        order = np.argsort(dims)
+        indices[i, :k] = dims[order]
+        values[i, :k] = vals[order]
+    if n_sh:
+        nnz = nnz + n_sh
     return _finish(indices, values, nnz, m)

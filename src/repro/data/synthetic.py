@@ -95,7 +95,9 @@ def clustered_corpus(
     return D
 
 
-def paper_like_corpus(name: str, *, scale: float = 0.02, seed: int = 0) -> tuple[np.ndarray, float]:
+def paper_like_corpus(
+    name: str, *, scale: float = 0.02, seed: int = 0
+) -> tuple[np.ndarray, float]:
     """A scaled-down stand-in for one of the paper's Table-1 datasets.
 
     ``scale`` shrinks n and m (nnz shrinks ~quadratically less); returns

@@ -31,7 +31,11 @@ class StragglerReport:
     tolerance: float
 
     def __str__(self) -> str:
-        bad = ", ".join(f"rank{r}: {t*1e3:.1f}ms" for r, t in self.rank_ema.items() if r in self.evict)
+        bad = ", ".join(
+            f"rank{r}: {t*1e3:.1f}ms"
+            for r, t in self.rank_ema.items()
+            if r in self.evict
+        )
         return (
             f"StragglerReport(median={self.median_ema*1e3:.1f}ms, "
             f"tolerance={self.tolerance}x, evict=[{bad}])"

@@ -400,7 +400,7 @@ def _tile_cand_kernel(
 
 
 def _rect_cand_kernel(
-    ij_ref,     # scalar-prefetch (2, T) i32 — live (qi, cj) tile coordinates
+    ij_ref,     # scalar-prefetch (2|3, T) i32 — live (qi, cj[, gj]) coords
     x_ref,      # (bq, bk) query tile
     y_ref,      # (bc, bk) corpus tile
     fv_ref,     # out (1, bq, k) f32
@@ -431,8 +431,13 @@ def _rect_cand_kernel(
 
     @pl.when(kf == nkf - 1)
     def _emit():
+        # Packet column ids come from the LAST worklist row: for a (2, T)
+        # worklist that is the local block id itself; a (3, T) worklist
+        # (sharded serving) carries a separate GLOBAL block id so ids and
+        # validity are evaluated in global coordinates while the DMA index
+        # map still uses the device-local row 1.
         fv, fi, fc = _rect_tile_packets(
-            acc_ref[...], ij_ref[1, t],
+            acc_ref[...], ij_ref[ij_ref.shape[0] - 1, t],
             threshold=threshold, k=k, block_q=block_q, block_c=block_c,
             nc_valid=nc_valid,
         )
@@ -471,7 +476,7 @@ def rect_tile_candidates_pallas(
     assert nq % block_q == 0 and nc % block_c == 0, (nq, nc, block_q, block_c)
     assert m % block_k == 0, (m, block_k)
     T = ij.shape[1]
-    assert ij.shape == (2, T)
+    assert ij.shape[0] in (2, 3), ij.shape
     nkf = m // block_k
 
     kernel = functools.partial(
@@ -506,6 +511,175 @@ def rect_tile_candidates_pallas(
         ),
         interpret=interpret,
     )(ij.astype(jnp.int32), Q, C)
+
+
+def _rect_ee_cand_kernel(
+    ij_ref,     # scalar-prefetch (2, T) i32 — live (qi, cj) tile coordinates
+    x_ref,      # (bq, bk) query tile
+    y_ref,      # (bc, bk) corpus tile
+    ub_ref,     # (1, 1) f32 — this tile's upper bound (NEG_LARGE on padding)
+    fv_ref,     # out (1, bq, k) f32
+    fi_ref,     # out (1, bq, k) i32
+    fc_ref,     # out (1, bq, 1) i32
+    sk_ref,     # out (1, 1) i32 — 1 iff this tile was early-exit skipped
+    acc_ref,    # scratch (bq, bc) f32
+    topv_ref,   # scratch (nq, k) f32 — running top-k VALUES per query row
+    *,
+    threshold: float,
+    k: int,
+    block_q: int,
+    block_c: int,
+    nc_valid: int,
+    nq_valid: int,
+):
+    t = pl.program_id(0)
+    kf = pl.program_id(1)
+    nkf = pl.num_programs(1)
+    qi = ij_ref[0, t]
+
+    @pl.when((t == 0) & (kf == 0))
+    def _init_topv():
+        topv_ref[...] = jnp.full_like(topv_ref, NEG_LARGE)
+
+    # Early-exit test (recomputed per kf step — topv only moves at the last
+    # kf of a *scored* tile, so every step of tile t sees the same answer):
+    # the worklist is ordered by upper bound DESCENDING, so once every live
+    # row of this query block already holds k real values ≥ this tile's
+    # bound, no candidate in it (value ≤ ub) can enter any top-k buffer —
+    # ties lose to the buffer under the stable merge. Padding rows
+    # (global row ≥ nq_valid) are excluded or an unfull row would pin the
+    # block forever; padding worklist entries carry ub = NEG_LARGE and are
+    # always skipped.
+    cur = pl.load(topv_ref, (pl.ds(qi * block_q, block_q), slice(None)))
+    kth = cur[:, k - 1:k]                                   # (bq, 1)
+    rows = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, 1), 0
+    )
+    kth = jnp.where(rows < nq_valid, kth, -NEG_LARGE)
+    skip = jnp.min(kth) >= ub_ref[0, 0]
+
+    @pl.when(~skip & (kf == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(~skip)
+    def _accumulate():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...],
+            y_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when((kf == nkf - 1) & skip)
+    def _emit_neutral():
+        fv_ref[0] = jnp.full((block_q, k), NEG_LARGE, jnp.float32)
+        fi_ref[0] = jnp.full((block_q, k), -1, jnp.int32)
+        fc_ref[0] = jnp.zeros((block_q, 1), jnp.int32)
+        sk_ref[0, 0] = jnp.int32(1)
+
+    @pl.when((kf == nkf - 1) & ~skip)
+    def _emit():
+        fv, fi, fc = _rect_tile_packets(
+            acc_ref[...], ij_ref[1, t],
+            threshold=threshold, k=k, block_q=block_q, block_c=block_c,
+            nc_valid=nc_valid,
+        )
+        fv_ref[0] = fv
+        fi_ref[0] = fi
+        fc_ref[0] = fc
+        sk_ref[0, 0] = jnp.int32(0)
+        dummy = jnp.zeros((block_q, k), jnp.int32)
+        merged_v, _ = _merge_topk(cur, dummy, fv, dummy, k)
+        pl.store(
+            topv_ref,
+            (pl.ds(qi * block_q, block_q), slice(None)),
+            merged_v,
+        )
+
+
+def rect_tile_candidates_early_exit_pallas(
+    Q: jax.Array,
+    C: jax.Array,
+    ij: jax.Array,
+    ub: jax.Array,
+    threshold: float,
+    k: int,
+    *,
+    block_q: int = 128,
+    block_c: int = 256,
+    block_k: int = 512,
+    nc_valid: int,
+    nq_valid: int,
+    interpret: bool = False,
+):
+    """Early-exit-aware variant of :func:`rect_tile_candidates_pallas`.
+
+    Carries a per-query-row running top-k VALUES buffer in VMEM scratch
+    across the (sequential) tile axis; a tile whose upper bound ``ub[t]`` is
+    beaten by every live row's current k-th value skips its MXU work via
+    ``@pl.when`` and emits a neutral packet plus a skip flag. A Pallas grid
+    cannot terminate early, so — unlike the XLA while_loop path — skipped
+    tiles still occupy pipeline slots; the win is the gated matmul.
+
+    Returns ``(fv, fi, fc, skipped)`` where ``skipped`` is ``(T, 1)`` i32.
+    Exactness contract matches the XLA early-exit fold: top-k values and
+    indices are bit-identical to the non-early-exit path; only counts
+    beyond k are lost (the caller saturates them at k).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    nq, m = Q.shape
+    nc, m2 = C.shape
+    assert m == m2, (m, m2)
+    assert nq % block_q == 0 and nc % block_c == 0, (nq, nc, block_q, block_c)
+    assert m % block_k == 0, (m, block_k)
+    T = ij.shape[1]
+    assert ij.shape == (2, T)
+    nkf = m // block_k
+    ub2 = ub.astype(jnp.float32).reshape(T, 1)
+
+    kernel = functools.partial(
+        _rect_ee_cand_kernel,
+        threshold=threshold, k=k, block_q=block_q, block_c=block_c,
+        nc_valid=nc_valid, nq_valid=nq_valid,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T, nkf),
+        in_specs=[
+            pl.BlockSpec((block_q, block_k), lambda t, kf, ij: (ij[0, t], kf)),
+            pl.BlockSpec((block_c, block_k), lambda t, kf, ij: (ij[1, t], kf)),
+            pl.BlockSpec((1, 1), lambda t, kf, ij: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_q, k), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda t, kf, ij: (t, 0, 0)),
+            pl.BlockSpec((1, 1), lambda t, kf, ij: (t, 0)),
+        ],
+        scratch_shapes=[
+            vmem((block_q, block_c), jnp.float32),
+            vmem((nq, k), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, block_q, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, block_q, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, block_q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((T, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            # Both axes "arbitrary": the running top-k scratch carried across
+            # tiles makes the t axis order-dependent (vs "parallel" in the
+            # non-early-exit kernel).
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(ij.astype(jnp.int32), Q, C, ub2)
 
 
 def apss_tile_candidates_pallas(

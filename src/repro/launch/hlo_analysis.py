@@ -372,7 +372,9 @@ def analyze(text: str) -> dict:
         for ins in comp.instrs:
             if ins.op == "dot":
                 flops += w * _dot_flops(ins, comp.table)
-            if ins.op.replace("-start", "") in _COLLECTIVES and not ins.op.endswith("-done"):
+            if ins.op.replace("-start", "") in _COLLECTIVES and not ins.op.endswith(
+                "-done"
+            ):
                 kind, payload, link = _collective_link_bytes(ins)
                 coll[kind]["count"] += w
                 coll[kind]["payload_bytes"] += w * payload

@@ -91,7 +91,11 @@ class LMServer:
 def run_retrieval(args) -> None:
     """Retrieval mode: index once, serve query batches, report QPS."""
     from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
-    from repro.serving import RetrievalServer, build_index
+    from repro.serving import (
+        ContinuousRetrievalServer,
+        RetrievalServer,
+        build_index,
+    )
 
     t0 = time.time()
     sp = sparse_clustered_corpus(
@@ -124,21 +128,28 @@ def run_retrieval(args) -> None:
             plan = FaultPlan.chaos(args.chaos_seed, steps=steps,
                                    kernel_errors=2, scope="serving",
                                    error_scope="serving.xla")
-        return RetrievalServer(
-            index, threshold=args.threshold, k=args.k, max_batch=args.batch,
+        kwargs = dict(
+            threshold=args.threshold, k=args.k, max_batch=args.batch,
             deadline_s=deadline_s, fault_plan=plan,
             max_retries=2, backoff_s=0.001,
         )
+        if args.server == "continuous":
+            return ContinuousRetrievalServer(
+                index, workers=args.workers, **kwargs
+            )
+        return RetrievalServer(index, **kwargs)
 
     # Warm up compile caches on a THROWAWAY server (the jitted scoring
     # paths are module-level, so compilation carries over), then time a
     # fresh one — otherwise the warmup batch sits in the LRU cache and
     # inflates the measured QPS.
-    make_server().serve(qs[: args.batch])
+    with contextlib.closing(make_server()) as warm:
+        warm.serve(qs[: args.batch])
     srv = make_server(chaos=args.chaos)
-    t0 = time.time()
-    results = srv.serve(qs)
-    dt = time.time() - t0
+    with contextlib.closing(srv):
+        t0 = time.time()
+        results = srv.serve(qs)
+        dt = time.time() - t0
     n_match = sum(r.count for r in results)
     served = [r for r in results if r.status == "ok"]
     print(
@@ -147,7 +158,7 @@ def run_retrieval(args) -> None:
         + (f" chaos seed={args.chaos_seed}" if args.chaos else "")
     )
     print(
-        f"[serve] {len(results)} queries in {dt:.3f}s "
+        f"[serve] {args.server} server: {len(results)} queries in {dt:.3f}s "
         f"({len(results)/dt:.1f} QPS, batch {args.batch}, "
         f"{1e3*dt/len(results):.2f} ms/query), {n_match} matches, "
         f"{len(served)} exact, stats={srv.stats}"
@@ -218,6 +229,12 @@ def main() -> None:
     ap.add_argument("--avg-nnz", type=float, default=16.0)
     ap.add_argument("--block", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--server", choices=["step", "continuous"],
+                    default="continuous",
+                    help="retrieval mode: step-boundary batching or"
+                         " slot-granularity continuous batching")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="continuous server: concurrent scoring workers")
     ap.add_argument("--threshold", type=float, default=0.5)
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--autotune", action="store_true",

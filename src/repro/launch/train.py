@@ -22,7 +22,11 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.distributed import StepTimer, use_mesh
 from repro.models import gnn, recsys
-from repro.models.transformer import TransformerConfig, init_transformer, transformer_loss
+from repro.models.transformer import (
+    TransformerConfig,
+    init_transformer,
+    transformer_loss,
+)
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 
 
@@ -100,7 +104,9 @@ def make_train_step(
     return train_step
 
 
-def make_lm_train_step(cfg: TransformerConfig, hp: TrainHyperparams = TrainHyperparams()):
+def make_lm_train_step(
+    cfg: TransformerConfig, hp: TrainHyperparams = TrainHyperparams()
+):
     return make_train_step(
         lambda p, b: transformer_loss(p, cfg, b), hp,
         accum_steps=getattr(cfg, "grad_accum", 1),

@@ -51,8 +51,12 @@ def init_gat(key, cfg: GATConfig) -> dict:
         heads = 1 if last else cfg.n_heads
         layers.append({
             "w": dense_init(k1, d_in, heads * d_out, cfg.dtype),
-            "a_src": (jax.random.normal(k2, (heads, d_out), jnp.float32) * 0.1).astype(cfg.dtype),
-            "a_dst": (jax.random.normal(k3, (heads, d_out), jnp.float32) * 0.1).astype(cfg.dtype),
+            "a_src": (
+                jax.random.normal(k2, (heads, d_out), jnp.float32) * 0.1
+            ).astype(cfg.dtype),
+            "a_dst": (
+                jax.random.normal(k3, (heads, d_out), jnp.float32) * 0.1
+            ).astype(cfg.dtype),
         })
         d_in = d_out if last else cfg.d_hidden * cfg.n_heads
     return {"layers": layers}
@@ -100,8 +104,9 @@ def gat_layer(
     n = x.shape[0]
     h = jnp.einsum("nf,fe->ne", x, p["w"]).reshape(n, heads, d_out)
     # SDDMM: per-edge attention logits from endpoint projections.
-    alpha_src = jnp.einsum("nhd,hd->nh", h.astype(jnp.float32), p["a_src"].astype(jnp.float32))
-    alpha_dst = jnp.einsum("nhd,hd->nh", h.astype(jnp.float32), p["a_dst"].astype(jnp.float32))
+    h32 = h.astype(jnp.float32)
+    alpha_src = jnp.einsum("nhd,hd->nh", h32, p["a_src"].astype(jnp.float32))
+    alpha_dst = jnp.einsum("nhd,hd->nh", h32, p["a_dst"].astype(jnp.float32))
     e = alpha_src[edge_src] + alpha_dst[edge_dst]                 # (E, H)
     e = jax.nn.leaky_relu(e, negative_slope)
     att = segment_softmax(e, edge_dst, n, edge_mask)              # (E, H)

@@ -184,7 +184,9 @@ def decode_attention_xla(
 # -- MLP ----------------------------------------------------------------------
 
 
-def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+def swiglu(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+) -> jax.Array:
     """SwiGLU MLP (LLaMA/Qwen FFN)."""
     g = jnp.einsum("...d,df->...f", x, w_gate)
     u = jnp.einsum("...d,df->...f", x, w_up)
@@ -192,7 +194,9 @@ def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) 
     return jnp.einsum("...f,fd->...d", h, w_down)
 
 
-def mlp(x: jax.Array, ws: list[jax.Array], bs: list[jax.Array], act=jax.nn.relu) -> jax.Array:
+def mlp(
+    x: jax.Array, ws: list[jax.Array], bs: list[jax.Array], act=jax.nn.relu
+) -> jax.Array:
     """Plain MLP tower (recsys): act on every layer but the last."""
     h = x
     for i, (w, b) in enumerate(zip(ws, bs)):

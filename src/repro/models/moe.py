@@ -36,7 +36,9 @@ class MoEParams(NamedTuple):
     w_down: jax.Array    # (E, f, d)
 
 
-def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.bfloat16) -> MoEParams:
+def init_moe(
+    key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.bfloat16
+) -> MoEParams:
     ks = jax.random.split(key, 4)
     def ex(k, a, b):
         scale = (2.0 / (a + b)) ** 0.5
@@ -102,7 +104,9 @@ def moe_ffn(
     # Rank within expert group = position - group start.
     counts = jnp.bincount(flat_expert, length=E)          # (E,)
     starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
-    rank = jnp.arange(T * top_k, dtype=jnp.int32) - starts[sorted_expert].astype(jnp.int32)
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - starts[sorted_expert].astype(
+        jnp.int32
+    )
     keep = rank < C
     dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
 

@@ -113,7 +113,8 @@ def two_tower_param_specs(cfg: TwoTowerConfig) -> dict:
 
 
 def _l2norm(x):
-    return x / jnp.maximum(jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True), 1e-6).astype(x.dtype)
+    n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True)
+    return x / jnp.maximum(n, 1e-6).astype(x.dtype)
 
 
 def user_embedding(params, cfg: TwoTowerConfig, batch) -> jax.Array:
@@ -335,13 +336,17 @@ def din_param_specs(cfg: DINConfig) -> dict:
 
 
 def din_logits(params, cfg: DINConfig, batch) -> jax.Array:
-    hist = jnp.take(params["item_table"], jnp.maximum(batch["history"], 0), axis=0)  # (B,S,E)
+    hist = jnp.take(  # (B,S,E)
+        params["item_table"], jnp.maximum(batch["history"], 0), axis=0
+    )
     valid = (batch["history"] >= 0).astype(jnp.float32)
     target = jnp.take(params["item_table"], batch["item_ids"], axis=0)  # (B,E)
     t = jnp.broadcast_to(target[:, None, :], hist.shape)
     ai = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)        # (B,S,4E)
-    score = mlp(ai, params["attn"]["w"], params["attn"]["b"], act=jax.nn.sigmoid)[..., 0]
-    score = score * valid                                               # DIN: no softmax
+    score = mlp(ai, params["attn"]["w"], params["attn"]["b"], act=jax.nn.sigmoid)[
+        ..., 0
+    ]
+    score = score * valid  # DIN: no softmax
     pooled = jnp.einsum("bs,bse->be", score, hist)
     x = jnp.concatenate([pooled, target], axis=-1)
     return mlp(x, params["mlp"]["w"], params["mlp"]["b"])[..., 0]
@@ -444,7 +449,9 @@ def bst_logits(params, cfg: BSTConfig, batch) -> jax.Array:
             jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"]), p["w2"]) + p["b2"]
         x = rms_norm(x + ff, p["norm2"])
     flat = x.reshape(b, s * e)
-    return mlp(flat, params["mlp"]["w"], params["mlp"]["b"], act=jax.nn.leaky_relu)[..., 0]
+    return mlp(flat, params["mlp"]["w"], params["mlp"]["b"], act=jax.nn.leaky_relu)[
+        ..., 0
+    ]
 
 
 def bst_loss(params, cfg: BSTConfig, batch) -> tuple[jax.Array, dict]:

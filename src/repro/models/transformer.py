@@ -342,8 +342,9 @@ def _attention(p, cfg: TransformerConfig, x, positions):
         hkv = cfg.n_kv_heads
     # (B, S, H, D) → (B, H, S, D), heads sharded over model
     q = shard(jnp.swapaxes(q, 1, 2), ("pod", "data"), "model", None, None)
-    k = shard(jnp.swapaxes(k, 1, 2), ("pod", "data"), "model" if hkv == cfg.n_heads else None, None, None)
-    v = shard(jnp.swapaxes(v, 1, 2), ("pod", "data"), "model" if hkv == cfg.n_heads else None, None, None)
+    kv_axis = "model" if hkv == cfg.n_heads else None
+    k = shard(jnp.swapaxes(k, 1, 2), ("pod", "data"), kv_axis, None, None)
+    v = shard(jnp.swapaxes(v, 1, 2), ("pod", "data"), kv_axis, None, None)
     scale = 1.0 / (cfg.qk_head_dim ** 0.5)
     o = chunked_attention(
         q, k, v, causal=True, scale=scale,
@@ -376,9 +377,11 @@ def _ffn(p, cfg: TransformerConfig, x):
         )
     y = out.y.reshape(b, s, d)
     if "shared" in p:
-        y = y + swiglu(x, p["shared"]["w_gate"], p["shared"]["w_up"], p["shared"]["w_down"])
+        sh = p["shared"]
+        y = y + swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
     if "dense" in p:
-        y = y + swiglu(x, p["dense"]["w_gate"], p["dense"]["w_up"], p["dense"]["w_down"])
+        de = p["dense"]
+        y = y + swiglu(x, de["w_gate"], de["w_up"], de["w_down"])
     return y, out.aux_loss
 
 
@@ -493,13 +496,19 @@ def make_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
             "v": zeros(n_scanned, batch, cfg.n_kv_heads, max_len, cfg.head_dim),
         }
         if n_dense:
-            cache["dense_k"] = zeros(n_dense, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
-            cache["dense_v"] = zeros(n_dense, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+            cache["dense_k"] = zeros(
+                n_dense, batch, cfg.n_kv_heads, max_len, cfg.head_dim
+            )
+            cache["dense_v"] = zeros(
+                n_dense, batch, cfg.n_kv_heads, max_len, cfg.head_dim
+            )
     cache["length"] = jnp.zeros((batch,), jnp.int32)
     return cache
 
 
-def cache_specs(cfg: TransformerConfig, *, seq_axes=("model",), batch_axes=("pod", "data")) -> dict:
+def cache_specs(
+    cfg: TransformerConfig, *, seq_axes=("model",), batch_axes=("pod", "data")
+) -> dict:
     """Cache PartitionSpecs: batch over data axes, sequence over seq_axes —
     sequence-parallel decode attention (GSPMD inserts the softmax
     all-reduces; see module docstring)."""
@@ -529,8 +538,9 @@ def _gqa_decode_attn(p, cfg, x, k_cache, v_cache, lengths):
     b = x.shape[0]
     pos = lengths  # (B,) new token position
     q = jnp.einsum("bd,dh->bh", x, p["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
-    k_new = jnp.einsum("bd,dh->bh", x, p["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
-    v_new = jnp.einsum("bd,dh->bh", x, p["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    kv_shape = (b, 1, cfg.n_kv_heads, cfg.head_dim)
+    k_new = jnp.einsum("bd,dh->bh", x, p["wk"]).reshape(kv_shape)
+    v_new = jnp.einsum("bd,dh->bh", x, p["wv"]).reshape(kv_shape)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_scale"])
         k_new = rms_norm(k_new, p["k_scale"])
@@ -584,11 +594,14 @@ def _mla_decode_attn(p, cfg, x, c_cache, pe_cache, lengths):
     wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
     w_k = wkv_b[..., :dn]                                 # (r, h, dn)
     w_v = wkv_b[..., dn:]                                 # (r, h, dv)
-    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
+    q_lat = jnp.einsum(
+        "bhn,rhn->bhr", q_nope.astype(jnp.float32), w_k.astype(jnp.float32)
+    )
     scale = 1.0 / (cfg.qk_head_dim ** 0.5)
+    pe32 = pe_cache.astype(jnp.float32)
     s = (
         jnp.einsum("bhr,blr->bhl", q_lat, c_cache.astype(jnp.float32))
-        + jnp.einsum("bhr,blr->bhl", q_pe.astype(jnp.float32), pe_cache.astype(jnp.float32))
+        + jnp.einsum("bhr,blr->bhl", q_pe.astype(jnp.float32), pe32)
     ) * scale
     L = c_cache.shape[1]
     valid = jnp.arange(L)[None, None, :] < (lengths + 1)[:, None, None]

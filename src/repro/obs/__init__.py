@@ -25,7 +25,14 @@ See DESIGN.md §10 for the span taxonomy and metrics catalog, §11 for the
 compile-time half (retrace contracts, audit ratio semantics).
 """
 
-from repro.obs import compile, drift, export, metrics, recorder, trace  # noqa: F401,A004
+from repro.obs import (  # noqa: F401,A004
+    compile,
+    drift,
+    export,
+    metrics,
+    recorder,
+    trace,
+)
 from repro.obs.compile import (  # noqa: F401
     CompileMonitor,
     CompileRecord,

@@ -98,7 +98,9 @@ def compress_tree(
     )
 
 
-def compression_comm_bytes(grads, *, ratio: float = 0.01, min_size: int = 4096, p: int = 2) -> dict:
+def compression_comm_bytes(
+    grads, *, ratio: float = 0.01, min_size: int = 4096, p: int = 2
+) -> dict:
     """Napkin accounting: dense vs compressed collective volume (bytes)."""
     dense = 0
     compressed = 0

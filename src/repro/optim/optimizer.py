@@ -36,7 +36,10 @@ def clip_by_global_norm(grads, max_norm: float):
         )
     )
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+    clipped = jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    )
+    return clipped, norm
 
 
 def adamw_update(

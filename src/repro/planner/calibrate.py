@@ -39,7 +39,9 @@ def device_kind() -> str:
 
 
 def profile_path(kind: Optional[str] = None) -> Path:
-    base = Path(os.environ.get("REPRO_CALIB_DIR", Path.home() / ".cache" / "repro_apss"))
+    base = Path(
+        os.environ.get("REPRO_CALIB_DIR", Path.home() / ".cache" / "repro_apss")
+    )
     return base / f"calibration_{kind or device_kind()}.json"
 
 

@@ -58,6 +58,14 @@ class CalibrationProfile:
     collective_gbps: float = 4.0
     collective_latency_us: float = 50.0
     overhead_us: float = 200.0           # per-call dispatch/launch floor
+    # Serving-side (query_topk) terms. Older cached profiles lack these
+    # keys; from_json fills the defaults, so calibration files never go
+    # stale. serving_overhead_us is the per-CALL fixed cost of the query
+    # path (mask eval + host worklist compaction + dispatch); the per-tile
+    # terms are priced through the primitive throughputs above.
+    serving_overhead_us: float = 150.0
+    serving_tile_fixed_ns: float = 1500.0   # per live tile: scan/DMA step cost
+    kernel_tile_fixed_ns: float = 400.0     # same, rect Pallas kernel path
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2) + "\n"
@@ -65,7 +73,8 @@ class CalibrationProfile:
     @classmethod
     def from_json(cls, text: str) -> "CalibrationProfile":
         d = json.loads(text)
-        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls) if f.name in d})
+        fields = dataclasses.fields(cls)
+        return cls(**{f.name: d[f.name] for f in fields if f.name in d})
 
     def throughput(self, *, sparse: bool, distributed: bool) -> float:
         """FLOPs/s of the matching scoring primitive."""
@@ -143,7 +152,7 @@ class CorpusSummary:
 class VariantConfig:
     """One candidate execution configuration the planner can rank/dispatch."""
 
-    kind: str                      # "blocked" | "horizontal" | "vertical" | "2d" | "hierarchical"
+    kind: str  # "blocked" | "horizontal" | "vertical" | "2d" | "hierarchical"
     sparse: bool
     block_rows: int
     use_kernel: bool = False
@@ -339,3 +348,133 @@ def estimate_cost(
         total_s=body + profile.overhead_us * 1e-6,
         imbalance=imb,
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-batch serving plans (query_topk(plan="auto"))
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One priced ``query_topk`` execution choice for one batch.
+
+    Unlike the offline :class:`VariantConfig` ranking — which prices whole
+    self-join sweeps from SAMPLED corpus summaries — a query plan is priced
+    from the index's exact :class:`~repro.core.pruning.BlockStats`: the
+    corpus-side bounds are already materialized, so the live-tile estimate
+    costs one tiny host pass over ``(mw, max_nnz)`` and involves zero
+    sampling. ``block_q`` trades mask granularity (smaller blocks prune
+    tighter) against per-tile fixed cost (fewer, fatter tiles amortize
+    better); ``use_kernel`` is offered only where the rect Pallas kernels
+    are the real path (TPU).
+    """
+
+    batch: int
+    block_q: int
+    use_kernel: bool
+    predicted_us: float
+    live_block_fraction: float
+
+    def as_dict(self) -> dict:
+        return {
+            "batch": int(self.batch),
+            "block_q": int(self.block_q),
+            "use_kernel": bool(self.use_kernel),
+            "predicted_us": float(self.predicted_us),
+            "live_block_fraction": float(self.live_block_fraction),
+        }
+
+
+_QUERY_BLOCK_CANDIDATES = (8, 16, 32, 64, 128)
+
+
+def _corpus_live_fraction(index, threshold: float) -> float:
+    """Fraction of corpus blocks that can pass the bounds for a UNIT-NORM
+    query block, from the index's exact per-block stats.
+
+    For a normalized query row, the tile bound is ≤ ``mw_c · √max_nnz_c``
+    (Cauchy–Schwarz against the corpus block's weight/size maxima — the
+    same minsize-style term ``core.pruning`` evaluates), so blocks with
+    ``mw · √max_nnz < t`` are dead for EVERY query block and the live
+    fraction is query-independent. Queries are normalized on server ingest,
+    making this sound in the serving path; for an unnormalized index the
+    bound degenerates and we price the conservative 1.0.
+    """
+    if threshold <= 0 or not getattr(index, "normalized", False):
+        return 1.0
+    import numpy as np
+
+    mw, max_nnz = index.stats_host()
+    ub = np.asarray(mw) * np.sqrt(np.maximum(np.asarray(max_nnz, np.float64), 0))
+    return float((ub >= threshold).mean()) if ub.size else 1.0
+
+
+def plan_query_topk(
+    index,
+    batch: int,
+    threshold: float,
+    k: int = 32,
+    *,
+    profile: Optional[CalibrationProfile] = None,
+    allow_kernel: Optional[bool] = None,
+) -> QueryPlan:
+    """Price the ``(block_q, use_kernel)`` grid for ONE query batch.
+
+    Cost per candidate: fixed serving overhead + per-live-tile fixed cost
+    (scan step / kernel grid step) + scoring FLOPs over the calibrated
+    primitive throughput, where the live-tile count is
+    ``ceil(batch/block_q) · nb · live_fraction`` from the exact corpus
+    stats. The batch pads up to ``block_q``, so oversized blocks pay for
+    padding rows — which is exactly why small batches pick small blocks.
+
+    Records a ``serving/plan`` telemetry event when telemetry is enabled
+    (the decision trail the drift tests and bench_serve surface).
+    """
+    if profile is None:
+        profile = default_profile()
+    if allow_kernel is None:
+        from repro.kernels.apss_block.ops import _on_tpu
+
+        allow_kernel = _on_tpu()
+    live_frac = _corpus_live_fraction(index, threshold)
+    nb = max(1, index.n_blocks)
+    depth = (
+        int(index.bdims.shape[1])
+        if (index.is_sparse and index.bdims is not None)
+        else int(index.m)
+    )
+    thr = profile.throughput(sparse=index.is_sparse, distributed=False)
+    best = None
+    for block_q in _QUERY_BLOCK_CANDIDATES:
+        grid_q = -(-max(1, batch) // block_q)
+        tiles = grid_q * nb * live_frac
+        flops = 2.0 * tiles * block_q * index.block_rows * depth
+        for use_kernel in ((False, True) if allow_kernel else (False,)):
+            if use_kernel and index.is_sparse and index.mesh is not None:
+                continue
+            fixed_ns = (
+                profile.kernel_tile_fixed_ns
+                if use_kernel
+                else profile.serving_tile_fixed_ns
+            )
+            us = (
+                profile.serving_overhead_us
+                + tiles * fixed_ns * 1e-3
+                + flops / thr * 1e6
+            )
+            cand = QueryPlan(
+                batch=int(batch), block_q=block_q, use_kernel=use_kernel,
+                predicted_us=us, live_block_fraction=live_frac,
+            )
+            if best is None or cand.predicted_us < best.predicted_us:
+                best = cand
+    if telemetry.enabled():
+        telemetry.record(telemetry.ApssStats(
+            variant="serving/plan",
+            n=index.n, m=index.m, block_rows=index.block_rows,
+            sparse=index.is_sparse,
+            flops=0.0,
+            extra={"plan": best.as_dict(), "threshold": float(threshold), "k": int(k)},
+        ))
+    return best

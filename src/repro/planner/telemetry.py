@@ -381,17 +381,20 @@ def vertical_hops(
     if accumulation == "scatter":
         per = int((p - 1) / p * b * cols * 4)
         return (CollectiveHop("psum_scatter", "scores", axis, per, nb),)
+    gather_b = (p - 1) * b * capacity * 4
+    psum_b = 2 * (p - 1) * b * capacity * 4
     if accumulation == "compressed":
         return (
-            CollectiveHop("all_gather", "candidate_ids", axis, (p - 1) * b * capacity * 4, nb),
-            CollectiveHop("psum", "candidate_scores", axis, 2 * (p - 1) * b * capacity * 4, nb),
+            CollectiveHop("all_gather", "candidate_ids", axis, gather_b, nb),
+            CollectiveHop("psum", "candidate_scores", axis, psum_b, nb),
         )
     if accumulation == "recursive":
         levels = max(1, p.bit_length() - 1)
+        perm_b = 3 * b * capacity * 4
         return (
-            CollectiveHop("ppermute", "candidates", axis, 3 * b * capacity * 4, levels * nb),
-            CollectiveHop("all_gather", "candidate_ids", axis, (p - 1) * b * capacity * 4, nb),
-            CollectiveHop("psum", "candidate_scores", axis, 2 * (p - 1) * b * capacity * 4, nb),
+            CollectiveHop("ppermute", "candidates", axis, perm_b, levels * nb),
+            CollectiveHop("all_gather", "candidate_ids", axis, gather_b, nb),
+            CollectiveHop("psum", "candidate_scores", axis, psum_b, nb),
         )
     raise ValueError(f"unknown vertical accumulation: {accumulation}")
 

@@ -15,7 +15,10 @@ corpus is fixed and queries stream in. This package amortizes all of it:
   block maxima, live tiles only, no index rebuild inside jit.
 - :mod:`repro.serving.server` — :class:`RetrievalServer`: request batching
   at step boundaries, one jit'd ``query_topk`` per step, sharded partial
-  merge, LRU result cache.
+  merge, LRU result cache; :class:`ContinuousRetrievalServer`: the same
+  lifecycle with slot-granularity admission — worker threads pull batches
+  the moment requests arrive, so a straggling batch no longer quantizes
+  every queued request's p99 (DESIGN.md §12).
 - :mod:`repro.serving.mutable` — :class:`MutableAPSSIndex`: a live corpus
   over the same machinery — WAL-backed append/delete log, delta similarity
   join keeping a standing top-k graph current at cost proportional to the
@@ -29,4 +32,8 @@ the live-corpus log and delta join.
 from repro.serving.index import APSSIndex, build_index  # noqa: F401
 from repro.serving.mutable import MutableAPSSIndex  # noqa: F401
 from repro.serving.query import query_topk  # noqa: F401
-from repro.serving.server import RetrievalResult, RetrievalServer  # noqa: F401
+from repro.serving.server import (  # noqa: F401
+    ContinuousRetrievalServer,
+    RetrievalResult,
+    RetrievalServer,
+)

@@ -27,7 +27,11 @@ With ``mesh=``, corpus rows are ``device_put``-sharded over ``axis_name``
 (``P(axis, None)`` — block-aligned row shards) and queries are served by
 the per-shard scoring path (``query.py``): each device scores the
 replicated query batch against its local shard; partial top-k results are
-merged host-side. The small block stats stay replicated.
+merged host-side. The small block stats stay REPLICATED (``P()``), which
+is what makes sharded-query pruning work: the host evaluates the global
+bounds once, slices each shard's block range (:meth:`shard_block_range`)
+out of the live mask, and ships every device its own compacted worklist —
+a shard scores only its live tiles, never its whole local corpus.
 """
 
 from __future__ import annotations
@@ -120,6 +124,48 @@ class APSSIndex:
     @property
     def n_blocks(self) -> int:
         return self.n_padded // self.block_rows
+
+    @property
+    def n_shards(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.shape[self.axis_name])
+
+    @property
+    def nb_local(self) -> int:
+        """Corpus blocks owned by each shard (= ``n_blocks`` unsharded).
+
+        Build-time padding is to ``p · block_rows`` multiples, so the
+        division is always exact and shard ``s`` owns the contiguous global
+        block range ``[s · nb_local, (s+1) · nb_local)``.
+        """
+        return self.n_blocks // self.n_shards
+
+    def shard_block_range(self, s: int) -> tuple[int, int]:
+        """Global ``[lo, hi)`` corpus-block ids owned by shard ``s``.
+
+        The corpus-side :class:`BlockStats` are replicated (``P()``), so the
+        query path slices this range out of the GLOBAL live mask to compact
+        a per-shard worklist — each device then scores only its own live
+        tiles instead of every local tile (``query._sharded_query``).
+        """
+        lo = s * self.nb_local
+        return lo, lo + self.nb_local
+
+    def stats_host(self) -> tuple[np.ndarray, np.ndarray]:
+        """Host copies of the small per-block stat vectors ``(mw, max_nnz)``.
+
+        Cached on the instance: the per-batch query planner
+        (``planner.costmodel.plan_query_topk``) consults these exact bounds
+        on every plan decision — zero sampling, but also zero device
+        round-trips after the first call.
+        """
+        cached = getattr(self, "_stats_host", None)
+        if cached is None:
+            cached = (
+                np.asarray(self.stats.mw),
+                np.asarray(self.stats.max_nnz),
+            )
+            self._stats_host = cached
+        return cached
 
     def sparse_corpus(self) -> SparseCorpus:
         """The padded corpus as a :class:`SparseCorpus` view (sparse kind)."""
@@ -240,7 +286,8 @@ def _build_sparse(
     stats = sparse_block_stats(spp, block_rows)
     if mesh is not None:
         # Sharded placement: the CSR triple splits over row blocks; the
-        # per-shard scoring path streams CSR blocks with gather_dot, so the
+        # per-shard scoring path gathers only its LIVE CSR blocks (worklist
+        # from the replicated stats) with gather_dot, so the
         # (replicated-size) bdims/bx compaction is not built at all.
         sharded = NamedSharding(mesh, P(axis_name, None))
         triple = (

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import hashlib
+import threading
 import time
 from typing import NamedTuple, Optional, Sequence
 
@@ -389,6 +390,10 @@ class RetrievalServer:
             self.step()
         return [self.result(r) for r in rids]
 
+    def close(self) -> None:
+        """Nothing to stop (no background workers); here so callers can
+        treat step and continuous servers uniformly."""
+
     # -- LRU cache ----------------------------------------------------------
 
     def _cache_key(self, q: np.ndarray) -> str:
@@ -441,3 +446,237 @@ class RetrievalServer:
             retries=self._retries,
             stale=self._stale,
         )
+
+
+class ContinuousRetrievalServer(RetrievalServer):
+    """Slot-granularity (continuous-batching) retrieval server.
+
+    :class:`RetrievalServer` quantizes latency to ``step()`` boundaries:
+    every admitted request waits for the caller's next step, and one slow
+    batch (a straggling peer, an armed chaos delay) holds EVERY queued
+    request behind it — the classic step-latch p99 cliff. This subclass
+    keeps the whole request lifecycle — admission control, deadlines,
+    version-keyed LRU, the kernel→XLA→stale degradation ladder — and
+    replaces only the latch: ``workers`` background threads pull up to
+    ``max_batch`` requests the moment any are pending (LMServer's
+    slot-recycling idea applied to retrieval batches), so
+
+    - a request's service time starts at SUBMIT, not at the next step
+      boundary, and
+    - with ``workers ≥ 2`` a straggling batch delays only its own
+      occupants: the other worker keeps draining fresh arrivals, which is
+      precisely the p99 win ``benchmarks/bench_serve.py`` measures.
+
+    Threading contract: one lock guards the queue/results/cache/counters;
+    scoring runs OUTSIDE the lock (concurrent jit dispatch is safe — the
+    compiled executable is shared). Workers emit ``trace.event``\\ s only
+    (``admit``/``slot``/``exit``), never spans: the tracer keeps one open-
+    span stack, which cross-thread spans would interleave. Deadline sheds
+    happen at batch ASSEMBLY, same as the step server — a straggler never
+    wastes scoring work on answers nobody is waiting for. ``step()`` is a
+    no-op here (workers drain continuously); use ``result()``/``serve()``,
+    and ``close()`` (or the context manager) to stop the workers.
+    """
+
+    def __init__(self, index: APSSIndex, *, workers: int = 2, **kwargs):
+        super().__init__(index, **kwargs)
+        self._lock = threading.Lock()
+        self._work_ready = threading.Condition(self._lock)
+        self._done = threading.Condition(self._lock)
+        self._stop = False
+        self._batch_seq = 0  # chaos seam: the continuous analog of _steps
+        self._inflight: set[int] = set()  # claimed by a worker, not latched
+        self._workers = [
+            threading.Thread(
+                target=self._worker_loop, name=f"retrieval-slot-{i}",
+                daemon=True,
+            )
+            for i in range(max(1, int(workers)))
+        ]
+        for w in self._workers:
+            w.start()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the worker threads (idempotent). Pending requests are left
+        queued — ``close()`` is shutdown, not drain; call ``serve``/
+        ``result`` first if completion matters."""
+        with self._lock:
+            if self._stop:
+                return
+            self._stop = True
+            self._work_ready.notify_all()
+        for w in self._workers:
+            w.join()
+
+    def __enter__(self) -> "ContinuousRetrievalServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, query, *, deadline_s: Optional[float] = None) -> int:
+        """Enqueue one query; a worker picks it up immediately.
+
+        Same admission/cache/validation contract as the step server, made
+        thread-safe; the only behavioral difference is that admission WAKES
+        a worker instead of waiting for a step boundary.
+        """
+        q = self._coerce_query(query)
+        key = self._cache_key(q)
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self._requests += 1
+            telemetry.incr("serving.requests")
+            hit = self._cache_get(key)
+            if hit is not None:
+                self._cache_hits += 1
+                telemetry.incr("serving.cache_hits")
+                trace.event("cache_hit", rid=rid)
+                if metrics.enabled():
+                    metrics.observe("serving.latency_s", 0.0)
+                self._results[rid] = hit._replace(cached=True)
+                self._done.notify_all()
+                return rid
+            if (
+                self.max_pending is not None
+                and len(self._pending) >= self.max_pending
+            ):
+                self._shed_request(rid)
+                self._done.notify_all()
+                return rid
+            trace.event("admit", rid=rid, queued=len(self._pending))
+            budget = deadline_s if deadline_s is not None else self.deadline_s
+            now = time.monotonic()
+            deadline = now + budget if budget is not None else np.inf
+            self._pending.append((rid, q, key, deadline, now))
+            self._work_ready.notify()
+        return rid
+
+    def step(self) -> int:
+        """No-op: workers drain the queue continuously."""
+        return 0
+
+    def result(self, rid: int, timeout_s: Optional[float] = None) -> RetrievalResult:
+        """Block until ``rid``'s result latches, then pop it."""
+        deadline = (
+            time.monotonic() + timeout_s if timeout_s is not None else None
+        )
+        with self._lock:
+            while rid not in self._results:
+                if (
+                    rid >= self._next_id
+                    or (
+                        rid not in self._inflight
+                        and all(p[0] != rid for p in self._pending)
+                    )
+                ):
+                    raise KeyError(f"unknown request id {rid}")
+                if self._stop:
+                    raise RuntimeError("server closed while request pending")
+                wait = None
+                if deadline is not None:
+                    wait = deadline - time.monotonic()
+                    if wait <= 0:
+                        raise TimeoutError(f"result({rid}) timed out")
+                self._done.wait(timeout=wait)
+            return self._results.pop(rid)
+
+    def serve(self, queries: Sequence) -> list[RetrievalResult]:
+        """Submit all, block until every result latches, return in order."""
+        rids = [self.submit(q) for q in queries]
+        return [self.result(r) for r in rids]
+
+    # -- worker loop ---------------------------------------------------------
+
+    def _take_batch(self):
+        """Under the lock: shed expired requests, then claim up to
+        ``max_batch``. Returns ``(batch, seq)`` or ``None`` at shutdown."""
+        while True:
+            if self._stop:
+                return None
+            now = time.monotonic()
+            while self._pending and self._pending[0][3] < now:
+                rid = self._pending.popleft()[0]
+                self._shed_request(rid)
+                self._done.notify_all()
+            if self._pending:
+                batch = [
+                    self._pending.popleft()
+                    for _ in range(min(self.max_batch, len(self._pending)))
+                ]
+                self._inflight.update(b[0] for b in batch)
+                seq = self._batch_seq
+                self._batch_seq += 1
+                return batch, seq
+            self._work_ready.wait()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._lock:
+                taken = self._take_batch()
+                if taken is None:
+                    return
+                batch, seq = taken
+                trace.event(
+                    "slot", seq=seq, size=len(batch),
+                    queued=len(self._pending),
+                )
+                if metrics.enabled():
+                    metrics.observe(
+                        "serving.batch_occupancy",
+                        len(batch) / self.max_batch,
+                    )
+            # Scoring runs UNLOCKED: a straggling batch (chaos delay, slow
+            # tier) must not stop sibling workers from draining arrivals.
+            if self.fault_plan is not None:
+                self.fault_plan.delay("serving", step=seq)
+            Q = np.zeros((self.max_batch, self.index.m), np.float32)
+            for slot, (_, q, _, _, _) in enumerate(batch):
+                Q[slot] = q
+            Qj = jnp.asarray(Q)
+            if self.normalize:
+                Qj = normalize_rows(Qj)
+            m, tier = self._score_batch(Qj)
+            with self._lock:
+                self._steps += 1
+                self._latch_batch(batch, m, tier, seq)
+                self._done.notify_all()
+
+    def _latch_batch(self, batch, m, tier, seq) -> None:
+        now = time.monotonic()
+
+        def latch(rid: int, born: float, res: RetrievalResult) -> None:
+            self._results[rid] = res
+            self._inflight.discard(rid)
+            trace.event("exit", rid=rid, seq=seq, status=res.status, tier=tier)
+            if metrics.enabled():
+                metrics.observe("serving.latency_s", now - born)
+
+        if m is None:
+            for rid, _, key, _, born in batch:
+                stale = self._cache_get(key, stale_ok=True)
+                if stale is not None:
+                    self._stale += 1
+                    telemetry.incr("serving.stale")
+                    latch(rid, born, stale._replace(cached=True, status="stale"))
+                else:
+                    latch(rid, born, self._empty_result("failed"))
+            return
+        values = np.asarray(m.values)
+        indices = np.asarray(m.indices)
+        counts = np.asarray(m.counts)
+        for slot, (rid, _, key, _, born) in enumerate(batch):
+            v = values[slot].copy()
+            i = indices[slot].copy()
+            v.setflags(write=False)
+            i.setflags(write=False)
+            res = RetrievalResult(
+                values=v, indices=i, count=int(counts[slot]), cached=False
+            )
+            latch(rid, born, res)
+            self._cache_put(key, res)

@@ -60,8 +60,10 @@ def test_blocked_with_prune_stats(corpus):
 
 def test_similarity_topk_join():
     rng = np.random.default_rng(1)
-    Q = np.asarray(normalize_rows(jnp.asarray(rng.standard_normal((37, 24)).astype(np.float32))))
-    C = np.asarray(normalize_rows(jnp.asarray(rng.standard_normal((53, 24)).astype(np.float32))))
+    Q = rng.standard_normal((37, 24)).astype(np.float32)
+    C = rng.standard_normal((53, 24)).astype(np.float32)
+    Q = np.asarray(normalize_rows(jnp.asarray(Q)))
+    C = np.asarray(normalize_rows(jnp.asarray(C)))
     got = similarity_topk(jnp.asarray(Q), jnp.asarray(C), 0.2, k=8, block_rows=16)
     S = Q @ C.T
     np.testing.assert_array_equal(

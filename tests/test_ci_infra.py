@@ -55,6 +55,23 @@ def _valid_doc():
                                    "p99": 1500.0, "samples": 20}}
                 for b in ("1", "8", "64")
             },
+            "servers": {
+                regime: {
+                    "step": {"qps": 5000.0, "p50_us": 3000.0,
+                             "p95_us": 9000.0, "p99_us": 20000.0,
+                             "requests": 192},
+                    "continuous": {"qps": 6000.0, "p50_us": 2000.0,
+                                   "p95_us": 6000.0, "p99_us": 9000.0,
+                                   "requests": 192},
+                }
+                for regime in ("8", "64")
+            },
+            "early_exit": {
+                "n": 2048, "m": 1024, "threshold": 0.01, "k": 8,
+                "skipped_tiles": 28, "bit_exact": True,
+            },
+            "qps_batch64": 6000.0,
+            "p99_us": 9000.0,
         },
         "planner": {
             "profile": {"matmul_gflops": 1, "gather_gflops": 1,
@@ -142,6 +159,45 @@ def test_serving_latency_histogram_lane():
     doc = _valid_doc()
     doc["serving"]["batches"]["8"]["latency_us"]["p50"] = 0.0
     with pytest.raises(SchemaError, match="p50 must be positive"):
+        check(doc)
+
+
+def test_serving_server_curve_lane():
+    """The QPS/p99 curve (ISSUE 10): both regimes × both servers present,
+    percentiles ordered, and continuous ≤ step on p99 at the largest
+    regime — the tentpole's headline claim, gated."""
+    doc = _valid_doc()
+    del doc["serving"]["servers"]["64"]["continuous"]
+    with pytest.raises(SchemaError, match="continuous"):
+        check(doc)
+    doc = _valid_doc()
+    srv = doc["serving"]["servers"]["8"]["step"]
+    srv["p95_us"] = srv["p99_us"] + 1.0  # unordered
+    with pytest.raises(SchemaError, match="unordered"):
+        check(doc)
+    doc = _valid_doc()
+    doc["serving"]["servers"]["64"]["continuous"]["p99_us"] = 1e9
+    with pytest.raises(SchemaError, match="exceeds"):
+        check(doc)
+    # at the SMALL regime step may legitimately win — not gated
+    doc = _valid_doc()
+    doc["serving"]["servers"]["8"]["continuous"]["p99_us"] = 1e9
+    check(doc)
+
+
+def test_serving_early_exit_lane():
+    """Early exit must skip live tiles AND stay bit-exact."""
+    doc = _valid_doc()
+    doc["serving"]["early_exit"]["skipped_tiles"] = 0
+    with pytest.raises(SchemaError, match="skipped no live tiles"):
+        check(doc)
+    doc = _valid_doc()
+    doc["serving"]["early_exit"]["bit_exact"] = False
+    with pytest.raises(SchemaError, match="diverged"):
+        check(doc)
+    doc = _valid_doc()
+    del doc["serving"]["early_exit"]["skipped_tiles"]
+    with pytest.raises(SchemaError, match="early_exit"):
         check(doc)
 
 
@@ -238,7 +294,7 @@ def test_history_record_schema():
 # -- perf-regression sentinel -------------------------------------------------
 
 
-def _bench_doc(scale=1.0, sha="sha0"):
+def _bench_doc(scale=1.0, sha="sha0", qps=5000.0):
     """A minimal artifact with the lanes the sentinel extracts."""
     return {
         "variants": {
@@ -252,6 +308,8 @@ def _bench_doc(scale=1.0, sha="sha0"):
         "serving": {
             "index_build_us": 500.0 * scale,
             "batches": {"8": {"us_per_query": 20.0 * scale}},
+            "qps_batch64": qps,
+            "p99_us": 9000.0 * scale,
         },
         "mutable": {"deltas": [{"delta": 16, "append_s": 0.01 * scale}]},
         "provenance": {
@@ -269,6 +327,8 @@ def test_sentinel_extracts_stable_metrics():
     assert m["variants.fused.us_per_call"] == 100.0
     assert m["sparse_sweep.d=0.01.sparse-xla.us_per_call"] == 50.0
     assert m["serving.batch=8.us_per_query"] == 20.0
+    assert m["serving.qps_batch64"] == 5000.0
+    assert m["serving.p99_us"] == 9000.0
     assert m["mutable.delta=16.append_s"] == 0.01
     # the record the sentinel appends satisfies the history schema
     import tempfile
@@ -295,6 +355,26 @@ def test_sentinel_passes_without_baseline_and_flags_2x_slowdown(tmp_path):
     flagged = {r["metric"] for r in bad["regressions"]}
     assert "variants.fused.us_per_call" in flagged
     assert all(r["ratio"] == pytest.approx(2.0) for r in bad["regressions"])
+
+
+def test_sentinel_qps_is_gated_higher_is_better(tmp_path):
+    """``serving.qps_batch64`` inverts: a throughput DROP below
+    baseline/tolerance is the regression; latency drift on the same run
+    still gates the usual way."""
+    from benchmarks import sentinel
+
+    assert "serving.qps_batch64" in sentinel.HIGHER_IS_BETTER
+    hist = str(tmp_path / "h.jsonl")
+    for i in range(3):
+        sentinel.record(_bench_doc(sha=f"base{i}"), hist)
+    # QPS doubled: an improvement, not a regression
+    assert sentinel.check(_bench_doc(sha="pr", qps=10000.0), hist)["ok"]
+    # QPS halved: flagged, with the inverted ratio
+    bad = sentinel.check(_bench_doc(sha="pr", qps=2500.0), hist)
+    assert not bad["ok"]
+    flagged = {r["metric"]: r for r in bad["regressions"]}
+    assert set(flagged) == {"serving.qps_batch64"}
+    assert flagged["serving.qps_batch64"]["ratio"] == pytest.approx(2.0)
 
 
 def test_sentinel_rerecord_same_sha_replaces_not_duplicates(tmp_path):
@@ -470,3 +550,12 @@ def test_ci_workflow_wires_the_gate():
     assert "actions/cache" in wf
     assert "BENCH_history" in wf
     assert wf.index("sentinel check") < wf.index("sentinel record")
+    # serving-load lane (ISSUE 10): the bench_serve smoke feeds the
+    # QPS/p99 curve + early-exit gates; one live run per ref; manual runs
+    assert "benchmarks.bench_serve" in wf
+    assert "--smoke" in wf
+    assert "concurrency:" in wf
+    assert "cancel-in-progress: true" in wf
+    assert "workflow_dispatch" in wf
+    # format drift blocks: no advisory escape hatch left in the lint job
+    assert "continue-on-error" not in wf.split("tier1:")[0]

@@ -81,8 +81,9 @@ def test_apss_block_auto_mask_exact(corpus):
     """Auto bound mask must not change results (bounds are sound)."""
     X = jnp.asarray(np.repeat(corpus, 2, axis=0)[:256, :96])
     Xp = jnp.pad(X, ((0, 0), (0, 160)))
-    a = apss_block_matmul(Xp, Xp, 0.4, auto_mask=True, block_m=128, block_n=128, block_k=128)
-    b = apss_block_matmul(Xp, Xp, 0.4, auto_mask=False, block_m=128, block_n=128, block_k=128)
+    blocks = dict(block_m=128, block_n=128, block_k=128)
+    a = apss_block_matmul(Xp, Xp, 0.4, auto_mask=True, **blocks)
+    b = apss_block_matmul(Xp, Xp, 0.4, auto_mask=False, **blocks)
     np.testing.assert_allclose(a, b, atol=1e-5)
 
 

@@ -184,9 +184,8 @@ def test_vertical_requires_m_divisible(mesh8):
     """Dense vertical shards columns P(None, axis): m % p != 0 must be
     filtered at enumeration, not crash at dispatch."""
     rng = np.random.default_rng(5)
-    D = np.asarray(
-        normalize_rows(jnp.asarray(np.abs(rng.standard_normal((128, 100))).astype(np.float32)))
-    )
+    raw = np.abs(rng.standard_normal((128, 100))).astype(np.float32)
+    D = np.asarray(normalize_rows(jnp.asarray(raw)))
     s = summarize_corpus(D, T)
     cfgs = candidate_configs(s, mesh8, K, include_kernel=False)
     assert cfgs and not any(c.kind == "vertical" for c in cfgs)

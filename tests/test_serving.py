@@ -296,3 +296,212 @@ def test_sharded_index_second_query_no_retrace(mesh8):
     query_topk(index, jnp.asarray(Qn), 0.3, 4)
     with obs_compile.assert_no_retrace("serving.query"):
         query_topk(index, jnp.asarray(Qn * 0.5), 0.3, 4)
+
+
+# ===========================================================================
+# ISSUE 10: traced early-exit, sharded-pruning kernel, per-batch plans,
+# continuous batching
+# ===========================================================================
+
+
+def _check_early_exit_bitexact(ref, got, k):
+    """Early exit is bit-exact on values AND indices; its counts saturate
+    at k (the while_loop stops counting once every row holds k)."""
+    np.testing.assert_array_equal(np.asarray(ref.values), np.asarray(got.values))
+    np.testing.assert_array_equal(
+        np.asarray(ref.indices), np.asarray(got.indices)
+    )
+    np.testing.assert_array_equal(
+        np.minimum(np.asarray(ref.counts), k), np.asarray(got.counts)
+    )
+
+
+@pytest.mark.parametrize("density", [0.02, 0.1, 0.3])
+@pytest.mark.parametrize("threshold,k", [(0.2, 8), (0.5, 4), (-0.5, 6)])
+def test_query_topk_early_exit_exact(density, threshold, k):
+    """EE vs the full scan across densities × thresholds × both corpus
+    representations: identical values and indices, counts saturated at k
+    (the full scan itself is oracle-checked above)."""
+    Cn, Qn = _corpus_queries(220, 96, density, 11, seed=int(density * 100))
+    for corpus in (Cn, from_dense(Cn)):
+        index = build_index(corpus, block_rows=64, normalize=False)
+        ref = query_topk(index, jnp.asarray(Qn), threshold, k, block_q=16)
+        got = query_topk(
+            index, jnp.asarray(Qn), threshold, k, block_q=16, early_exit=True
+        )
+        _check_early_exit_bitexact(ref, got, k)
+
+
+def test_query_topk_early_exit_kernel_exact():
+    """The Pallas EE kernel (interpret mode off-TPU) matches the scan EE
+    path and the full scan."""
+    Cn, Qn = _corpus_queries(256, 128, 0.1, 8, seed=9)
+    index = build_index(Cn, block_rows=128, normalize=False)
+    ref = query_topk(index, jnp.asarray(Qn), 0.3, 8, block_q=128)
+    got = query_topk(
+        index, jnp.asarray(Qn), 0.3, 8, block_q=128,
+        early_exit=True, use_kernel=True,
+    )
+    _check_early_exit_bitexact(ref, got, 8)
+
+
+def test_early_exit_skips_tiles_on_overlap_clusters():
+    """The regime EE is for (DESIGN.md §12): clustered corpus with a weak
+    shared vocabulary — cross-cluster tiles stay live (mask can't drop
+    them) but lose to within-cluster top-k, so the ub-ordered scan skips
+    them. Skips must be > 0 AND the result bit-exact."""
+    from repro.data.sparse import perturbed_queries, sparse_clustered_corpus
+    from repro.obs.metrics import MetricsRegistry
+
+    sp = sparse_clustered_corpus(
+        2048, 1024, 16.0, n_clusters=16, seed=2, overlap_dims=8
+    )
+    index = build_index(sp, block_rows=64, normalize=False)
+    Q = jnp.asarray(perturbed_queries(sp, 64, seed=3))
+    with MetricsRegistry() as reg:
+        ref = query_topk(index, Q, 0.01, 8)
+        got = query_topk(index, Q, 0.01, 8, early_exit=True)
+    skipped = int(reg.counters.get("serving.early_exit_skipped_tiles", 0))
+    assert skipped > 0
+    _check_early_exit_bitexact(ref, got, 8)
+
+
+def test_early_exit_no_retrace_across_batches():
+    """EE inners carry nq_valid as a traced scalar: different batch sizes
+    within one block_q bucket must not re-trace."""
+    Cn, Qn = _corpus_queries(220, 96, 0.1, 8, seed=5)
+    index = build_index(Cn, block_rows=64, normalize=False)
+    query_topk(index, jnp.asarray(Qn), 0.3, 8, block_q=16, early_exit=True)
+    with obs_compile.assert_no_retrace("serving.query"):
+        query_topk(
+            index, jnp.asarray(Qn[:5] * 0.7), 0.3, 8, block_q=16,
+            early_exit=True,
+        )
+
+
+def test_sharded_early_exit_not_implemented(mesh8):
+    Cn, Qn = _corpus_queries(128, 64, 0.15, 4, seed=12)
+    index = build_index(Cn, block_rows=16, mesh=mesh8, normalize=False)
+    with pytest.raises(NotImplementedError):
+        query_topk(index, jnp.asarray(Qn), 0.3, 4, early_exit=True)
+
+
+@pytest.mark.parametrize("kind", ["dense", "sparse"])
+def test_sharded_query_pruned_parity(mesh8, kind):
+    """Sharded-query pruning (tentpole a): per-shard compacted worklists
+    through one shard_map must equal the unsharded path and the oracle."""
+    Cn, Qn = _corpus_queries(220, 96, 0.12, 9, seed=11)
+    corpus = Cn if kind == "dense" else from_dense(Cn)
+    index = build_index(corpus, block_rows=16, mesh=mesh8, normalize=False)
+    flat = build_index(corpus, block_rows=16, normalize=False)
+    ref = _rect_oracle(Qn, Cn, 0.3, 8)
+    got_sh = query_topk(index, jnp.asarray(Qn), 0.3, 8)
+    got_fl = query_topk(flat, jnp.asarray(Qn), 0.3, 8)
+    _check_rect(got_sh, ref, 9)
+    np.testing.assert_array_equal(
+        np.asarray(got_sh.counts), np.asarray(got_fl.counts)
+    )
+
+
+def test_sharded_query_kernel_parity(mesh8):
+    """The sharded kernel path (3-row worklists carrying global packet
+    ids) must match the sharded scan path exactly."""
+    Cn, Qn = _corpus_queries(256, 96, 0.12, 8, seed=13)
+    index = build_index(Cn, block_rows=32, mesh=mesh8, normalize=False)
+    ref = _rect_oracle(Qn, Cn, 0.3, 8)
+    got = query_topk(index, jnp.asarray(Qn), 0.3, 8, use_kernel=True)
+    _check_rect(got, ref, 8)
+
+
+def test_plan_query_topk_sanity():
+    """Per-batch plans (tentpole c): exact BlockStats in, a concrete
+    (block_q, use_kernel) out, telemetry record emitted, and the planned
+    call stays exact."""
+    from repro.planner import telemetry
+    from repro.planner.costmodel import QueryPlan, plan_query_topk
+
+    Cn, Qn = _corpus_queries(220, 96, 0.1, 8, seed=21)
+    index = build_index(Cn, block_rows=64, normalize=False)
+    with telemetry.CommLog() as log:
+        plan = plan_query_topk(index, 8, 0.3, k=8)
+    assert isinstance(plan, QueryPlan)
+    assert plan.block_q in (8, 16, 32, 64, 128)
+    assert plan.predicted_us > 0
+    assert 0.0 <= plan.live_block_fraction <= 1.0
+    assert not plan.use_kernel  # CPU: kernel tier not offered
+    assert any(
+        getattr(r, "variant", None) == "serving/plan" for r in log.records
+    )
+    ref = _rect_oracle(Qn, Cn, 0.3, 8)
+    _check_rect(query_topk(index, jnp.asarray(Qn), 0.3, 8, plan=plan), ref, 8)
+    _check_rect(
+        query_topk(index, jnp.asarray(Qn), 0.3, 8, plan="auto"), ref, 8
+    )
+
+
+def test_continuous_server_equals_oneshot():
+    """Continuous batching (tentpole d): slot-granularity admission changes
+    scheduling, never results — every response equals the one-shot call."""
+    from repro.serving import ContinuousRetrievalServer
+
+    Cn, Qn = _corpus_queries(220, 96, 0.12, 10, seed=7)
+    index = build_index(Cn, block_rows=64, normalize=False)
+    with ContinuousRetrievalServer(
+        index, workers=2, threshold=0.3, k=8, max_batch=4,
+        normalize=False, block_q=8,
+    ) as srv:
+        results = srv.serve([Qn[i] for i in range(10)])
+    assert len(results) == 10
+    assert all(r.status == "ok" for r in results)
+    for i, res in enumerate(results):
+        one = query_topk(index, jnp.asarray(Qn[i][None]), 0.3, 8, block_q=8)
+        assert res.count == int(np.asarray(one.counts)[0]), i
+        oi = np.asarray(one.indices)[0]
+        assert set(res.indices[res.indices >= 0]) == set(oi[oi >= 0]), i
+        np.testing.assert_allclose(
+            np.sort(res.values), np.sort(np.asarray(one.values)[0]), atol=1e-6
+        )
+
+
+def test_continuous_server_chaos_slow_slot_sheds_late_keeps_exact():
+    """A FaultPlan-delayed slot stalls one batch; requests that expire in
+    the queue behind it are shed, claimed requests complete exactly —
+    shed-late-keep-exact, the degraded-tier contract under continuous
+    admission."""
+    from repro.robust.faults import Fault, FaultPlan
+    from repro.serving import ContinuousRetrievalServer
+
+    Cn, Qn = _corpus_queries(96, 64, 0.15, 12, seed=8)
+    index = build_index(Cn, block_rows=32, normalize=False)
+    plan = FaultPlan([Fault("delay", "serving", step=0, seconds=0.4)])
+    with ContinuousRetrievalServer(
+        index, workers=1, threshold=0.2, k=4, max_batch=2,
+        normalize=False, block_q=4, deadline_s=0.15, fault_plan=plan,
+        cache_size=0,
+    ) as srv:
+        rids = [srv.submit(Qn[i]) for i in range(12)]
+        results = [srv.result(r) for r in rids]
+    assert plan.fired.get("delay:serving", 0) == 1
+    statuses = {r.status for r in results}
+    assert "shed" in statuses and "ok" in statuses
+    for i, res in enumerate(results):
+        if res.status != "ok":
+            assert res.count == 0
+            continue
+        one = query_topk(index, jnp.asarray(Qn[i][None]), 0.2, 4, block_q=4)
+        assert res.count == int(np.asarray(one.counts)[0]), i
+
+
+def test_continuous_server_result_unknown_rid_raises():
+    from repro.serving import ContinuousRetrievalServer
+
+    Cn, Qn = _corpus_queries(96, 64, 0.15, 2, seed=9)
+    index = build_index(Cn, block_rows=32, normalize=False)
+    with ContinuousRetrievalServer(
+        index, workers=1, threshold=0.2, k=4, max_batch=2, normalize=False,
+        block_q=4,
+    ) as srv:
+        rid = srv.submit(Qn[0])
+        srv.result(rid)
+        with pytest.raises(KeyError):
+            srv.result(rid + 999)

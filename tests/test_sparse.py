@@ -12,7 +12,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.apss import apss_blocked, apss_reference, normalize_rows, similarity_topk
+from repro.core.apss import (
+    apss_blocked,
+    apss_reference,
+    normalize_rows,
+    similarity_topk,
+)
 from repro.core.graph import match_set
 from repro.core.pruning import (
     sparse_block_prune_mask,
@@ -374,7 +379,10 @@ def test_duplicate_concentration_is_not_pruned():
     ref = apss_reference(to_dense(sp), t, 4)
     assert int(np.asarray(ref.counts).sum()) == 2
     _check(apss_sparse_compacted(sp, t, 4, block_m=16, lane_pad=8), ref)
-    _check(apss_sparse_compacted(sp, t, 4, block_m=16, lane_pad=8, use_kernel=True), ref)
+    _check(
+        apss_sparse_compacted(sp, t, 4, block_m=16, lane_pad=8, use_kernel=True),
+        ref,
+    )
 
 
 def test_negative_threshold_keeps_zero_similarity_pairs():
@@ -399,5 +407,8 @@ def test_adversarial_csr_join_equals_dense_reference(seed):
     ragged n, fixed seeds (runs even where hypothesis is absent)."""
     sp = random_csr(seed, 20 + 7 * seed, 40, 6)
     ref = apss_reference(to_dense(sp), 0.3, 32)
-    _check(sparse_similarity_topk(sp, sp, 0.3, 32, block_rows=16, exclude_self=True), ref)
+    _check(
+        sparse_similarity_topk(sp, sp, 0.3, 32, block_rows=16, exclude_self=True),
+        ref,
+    )
     _check(apss_sparse_compacted(sp, 0.3, 32, block_m=16, lane_pad=8), ref)
